@@ -1,0 +1,96 @@
+"""HLO collective/op inspector for the perf hillclimb.
+
+Compiles one (arch x shape) cell at shallow depth with cost-exact scans
+and prints every collective op (kind, dtype, shape, bytes) plus the top
+memory-traffic ops — the "profile" the §Perf loop iterates on.
+
+    PYTHONPATH=src:. python -m benchmarks.hlo_inspect --arch tinyllama-1.1b --shape train_4k
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--depth", type=int, default=0, help="layers (0 = one group)")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES_BY_NAME, TrainConfig, get_config
+    from repro.launch import roofline as rl
+    from repro.launch.dryrun import _compile_one, _depth_variant
+    from repro.utils.costmode import set_cost_exact
+
+    cfg = get_config(args.arch)
+    depth = args.depth or cfg.layer_group
+    cfg = _depth_variant(cfg, depth)
+    shape = SHAPES_BY_NAME[args.shape]
+    set_cost_exact(True)
+    try:
+        compiled, _, t = _compile_one(cfg, shape, args.multi_pod, TrainConfig())
+    finally:
+        set_cost_exact(False)
+    hlo = compiled.as_text()
+    print(f"# {args.arch} x {args.shape} depth={depth} compile={t:.1f}s "
+          f"hlo={len(hlo)/1e6:.1f} MB")
+
+    # collectives with shapes
+    pat = re.compile(
+        r"(\S+)\s*=\s*((?:\(?[\w\[\],{}\s/#*]*?\)?))\s*"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\("
+    )
+    rows = []
+    for m in pat.finditer(hlo):
+        name, shp, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = rl._shape_bytes(shp)
+        rows.append((nbytes, kind, shp.strip()[:90], name[:40]))
+    rows.sort(reverse=True)
+    agg = defaultdict(lambda: [0, 0.0])
+    for nbytes, kind, shp, _ in rows:
+        # aggregate by (kind, dtype)
+        dt = re.match(r"\(?(\w+)\[", shp)
+        key = (kind, dt.group(1) if dt else "?")
+        agg[key][0] += 1
+        agg[key][1] += nbytes
+    print("\n## collectives by (kind, dtype)")
+    for (kind, dt), (cnt, total) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        print(f"  {kind:20s} {dt:5s} x{cnt:<4d} {total/1e9:8.3f} GB")
+    print(f"\n## top {args.top} collectives")
+    for nbytes, kind, shp, name in rows[: args.top]:
+        print(f"  {nbytes/1e6:10.1f} MB  {kind:18s} {shp}")
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print(f"\nflops={cost.get('flops', 0):.3e}  bytes={cost.get('bytes accessed', 0):.3e}")
+    # biggest single ops by output size: fusion/layout hot spots
+    op_pat = re.compile(r"=\s*(\w+\[[\d,]*\])[^=]*?\b(fusion|dot|gather|scatter|convolution|"
+                        r"dynamic-update-slice|transpose|copy|reduce)\b", re.M)
+    ops = []
+    for m in op_pat.finditer(hlo):
+        ops.append((rl._shape_bytes(m.group(1)), m.group(2), m.group(1)))
+    ops.sort(reverse=True)
+    print(f"\n## top {args.top} op outputs by size")
+    seen = set()
+    shown = 0
+    for nbytes, op, shp in ops:
+        key = (op, shp)
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"  {nbytes/1e6:10.1f} MB  {op:22s} {shp}")
+        shown += 1
+        if shown >= args.top:
+            break
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Assemble EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(sec):
+    if sec is None:
+        return "-"
+    if sec >= 1:
+        return f"{sec:.2f} s"
+    return f"{sec*1e3:.2f} ms"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x/div:.2f} {unit}"
+    return f"{x:.0f} B"
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs, multi_pod: bool) -> str:
+    rows = [
+        "| arch | shape | status | FLOPs/dev | bytes/dev | wire/dev | t_comp | t_mem | t_coll | bottleneck | useful | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if bool(r.get("multi_pod")) != multi_pod:
+            continue
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | skipped | - | - | - | - | - | - | - | - | - |")
+            continue
+        if r["status"] == "error":
+            rows.append(f"| {arch} | {shape} | ERROR | - | - | - | - | - | - | - | - | - |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | ok "
+            f"| {ro['flops_per_device']:.2e} | {fmt_b(ro['bytes_per_device'])} "
+            f"| {fmt_b(ro['wire_bytes_per_device'])} "
+            f"| {fmt_t(ro['t_compute_s'])} | {fmt_t(ro['t_memory_s'])} | {fmt_t(ro['t_collective_s'])} "
+            f"| **{ro['bottleneck']}** | {ro['useful_flops_fraction']:.2f} "
+            f"| {ro['mfu_bound']*100:.1f}% |"
+        )
+    return "\n".join(rows)
+
+
+def memory_table(recs) -> str:
+    rows = [
+        "| arch | shape | mesh | args/dev | temps/dev | fits 16GB v5e? |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        m = r.get("memory_analysis", {})
+        a, t = m.get("argument_bytes"), m.get("temp_bytes")
+        fits = "-"
+        if a is not None and t is not None:
+            fits = "yes" if (a + t) < 16e9 else "**NO**"
+        pod = "2x16x16" if r["multi_pod"] else "16x16"
+        rows.append(f"| {r['arch']} | {r['shape']} | {pod} | {fmt_b(a)} | {fmt_b(t)} | {fits} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    print(f"## Roofline table — single pod (16x16 = 256 chips)\n")
+    print(table(recs, False))
+    print(f"\n## Roofline table — multi-pod (2x16x16 = 512 chips)\n")
+    print(table(recs, True))
+    print(f"\n## Memory analysis (per device)\n")
+    print(memory_table(recs))
+    print(f"\ncells: {n_ok} ok, {n_skip} skipped, {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

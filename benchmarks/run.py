@@ -1,0 +1,32 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    from benchmarks.bench_merge import (
+        bench_load_balance,
+        bench_merge_throughput,
+        bench_moe_dispatch,
+        bench_partition_cost,
+        bench_segmented_vs_regular,
+        bench_sort,
+    )
+
+    rows = []
+    for bench in (
+        bench_merge_throughput,
+        bench_partition_cost,
+        bench_load_balance,
+        bench_segmented_vs_regular,
+        bench_sort,
+        bench_moe_dispatch,
+    ):
+        print(f"# running {bench.__name__} ...", file=sys.stderr, flush=True)
+        bench(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+
+if __name__ == "__main__":
+    main()

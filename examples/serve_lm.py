@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests (continuous batching engine,
+merge-path top-k sampling).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main(["--arch", "tinyllama-1.1b", "--requests", "8",
+                    "--batch", "4", "--max-new", "12", "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Checkpointing: atomic, async, elastic-reshard restore.
+
+Layout per step::
+
+    <dir>/step_<k>.tmp/...   (written)
+    <dir>/step_<k>/          (atomic rename on completion)
+        manifest.json        {step, leaf paths, shapes, dtypes}
+        arrays.npz           flat leaf -> array
+
+* **atomic**: a crashed writer never leaves a loadable-but-corrupt step;
+  restore picks the newest complete directory.
+* **async**: ``save(..., blocking=False)`` snapshots to host memory and
+  writes in a daemon thread — the train loop keeps stepping.
+* **elastic**: ``restore(..., shardings=...)`` re-device_puts onto ANY
+  mesh (different device count / topology than the writer's) — this is
+  the restart path after losing nodes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write ---------------------------------------------------------
+    def save(self, step: int, state, blocking: bool = True) -> None:
+        flat = _flatten(state)  # host snapshot (device->host copy happens here)
+        if blocking:
+            self._write(step, flat)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, flat), daemon=True
+            )
+            self._thread.start()
+
+    def _write_guarded(self, step, flat):
+        try:
+            self._write(step, flat)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None, shardings=None):
+        """Restore into the structure of ``like`` (a state pytree or
+        eval_shape thereof); optionally device_put with new ``shardings``
+        (same tree structure) — the elastic-remesh path."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for kpath, leaf in flat_like[0]:
+            key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kpath)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs state {leaf.shape}")
+            leaves.append(arr)
+        state = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+        if shardings is not None:
+            state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+        return state

@@ -1,0 +1,22 @@
+from .base import (
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    shape_applicable,
+)
+from .registry import REGISTRY, ALIASES, get_config, list_archs
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "shape_applicable",
+    "REGISTRY",
+    "ALIASES",
+    "get_config",
+    "list_archs",
+]

@@ -1,0 +1,24 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU [arXiv:2402.16819; unverified].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.  relu^2 MLP
+(no gating).  The only assigned config whose optimizer state exceeds a
+single v5e pod's HBM => FSDP extends over the pod axis
+(``fsdp_over_pod=True``), recorded in EXPERIMENTS.md.
+"""
+
+from .base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family=DENSE,
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    act="relu2",
+    tie_embeddings=False,
+    fsdp_over_pod=True,
+)

@@ -1,0 +1,44 @@
+"""Merge Path core — the paper's contribution as composable JAX modules."""
+
+from .merge_path import (
+    diagonal_intersections,
+    merge,
+    merge_kv,
+    merge_sort,
+    merge_sort_kv,
+    max_sentinel,
+    partitioned_merge,
+    stable_argsort,
+    topk,
+    topk_desc,
+)
+from .segmented import segmented_merge, segmented_merge_kv
+from .distributed import (
+    distributed_merge,
+    distributed_merge_local,
+    distributed_sort,
+    distributed_sort_local,
+    distributed_topk,
+    distributed_topk_local,
+)
+
+__all__ = [
+    "diagonal_intersections",
+    "merge",
+    "merge_kv",
+    "merge_sort",
+    "merge_sort_kv",
+    "max_sentinel",
+    "partitioned_merge",
+    "stable_argsort",
+    "topk",
+    "topk_desc",
+    "segmented_merge",
+    "segmented_merge_kv",
+    "distributed_merge",
+    "distributed_merge_local",
+    "distributed_sort",
+    "distributed_sort_local",
+    "distributed_topk",
+    "distributed_topk_local",
+]

@@ -1,0 +1,230 @@
+"""Distributed Merge Path — the paper's algorithm lifted to a device mesh.
+
+The paper partitions one merge across p cores sharing a cache; here the
+"cores" are TPU chips sharing an ICI and the partition math is identical.
+Three primitives, each in two forms: a ``*_local`` body (runs inside
+``shard_map``, uses ``jax.lax`` collectives over a named axis) and a
+convenience wrapper that builds a 1-D mesh over all visible devices.
+
+* ``distributed_merge``: A and B sharded contiguously over the axis; each
+  device computes exactly its 1/P slice of the output after one
+  all_gather.  Compute is perfectly balanced by Corollary 7; the gather is
+  the (bandwidth-suboptimal, latency-optimal) Megatron-style choice — the
+  bandwidth-optimal alternative is the sample sort below, which moves each
+  element once via all_to_all.
+* ``distributed_sort``: sample sort with merge-path local sorts and a
+  log(P)-round merge-path combine.  This is the paper's parallel
+  merge-sort with the shared cache replaced by explicit collectives.
+* ``distributed_topk``: per-shard merge-path top-k, all_gather of the P
+  sorted candidate runs, merge-path combine.  Used for vocab-sharded
+  sampling in serving.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .merge_path import (
+    diagonal_intersections,
+    max_sentinel,
+    merge,
+    merge_sort,
+    topk_desc,
+)
+
+
+# ---------------------------------------------------------------------------
+# distributed merge
+# ---------------------------------------------------------------------------
+
+def distributed_merge_local(a_shard: jax.Array, b_shard: jax.Array, axis_name: str) -> jax.Array:
+    """Per-device body: merge globally-sharded sorted A and B.
+
+    Each device all_gathers A and B (one collective), finds its segment's
+    (a_start, b_start) by the cross-diagonal binary search on its own rank's
+    equispaced diagonal, and merges exactly ``N/P`` outputs.  Writes are
+    disjoint by Lemma 3 — the returned shard *is* this device's slice of S.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    p = jax.lax.axis_size(axis_name)
+    a = jax.lax.all_gather(a_shard, axis_name, tiled=True)
+    b = jax.lax.all_gather(b_shard, axis_name, tiled=True)
+    n = a.shape[0] + b.shape[0]
+    seg = n // p
+    dtype = jnp.result_type(a, b)
+    d0 = idx * seg
+    a0 = diagonal_intersections(a, b, d0[None])[0]
+    b0 = d0 - a0
+    # Window merge: a T-output segment needs at most T from each input
+    # (Lemma 16), so slice fixed windows and rank-merge them.
+    ap = jnp.concatenate([a.astype(dtype), jnp.full((seg,), max_sentinel(dtype))])
+    bp = jnp.concatenate([b.astype(dtype), jnp.full((seg,), max_sentinel(dtype))])
+    wa = jax.lax.dynamic_slice(ap, (a0,), (seg,))
+    wb = jax.lax.dynamic_slice(bp, (b0,), (seg,))
+    ra = jnp.arange(seg, dtype=jnp.int32) + jnp.searchsorted(wb, wa, side="left").astype(jnp.int32)
+    rb = jnp.arange(seg, dtype=jnp.int32) + jnp.searchsorted(wa, wb, side="right").astype(jnp.int32)
+    out = jnp.zeros(seg, dtype)
+    out = out.at[ra].set(wa, mode="drop")
+    out = out.at[rb].set(wb, mode="drop")
+    return out
+
+
+def distributed_merge(a: jax.Array, b: jax.Array, mesh: Mesh | None = None, axis: str = "x") -> jax.Array:
+    """Merge two sorted arrays sharded over a 1-D mesh axis."""
+    if mesh is None:
+        mesh = Mesh(jax.devices(), (axis,))
+    fn = shard_map(
+        functools.partial(distributed_merge_local, axis_name=axis),
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,
+    )
+    return fn(a, b)
+
+
+# ---------------------------------------------------------------------------
+# distributed sample sort
+# ---------------------------------------------------------------------------
+
+def _pairwise_tree_merge(runs: jax.Array) -> jax.Array:
+    """Merge (R, L) sorted rows into one sorted (R*L,) array, log2(R) rounds."""
+    r = runs.shape[0]
+    # pad #runs to a power of two with sentinel rows
+    target = 1 << max(0, (r - 1).bit_length())
+    if target != r:
+        pad = jnp.full((target - r, runs.shape[1]), max_sentinel(runs.dtype))
+        runs = jnp.concatenate([runs, pad], axis=0)
+    while runs.shape[0] > 1:
+        half = runs.shape[0] // 2
+        merged = jax.vmap(merge)(runs[0::2], runs[1::2])
+        runs = merged
+    return runs[0]
+
+
+def distributed_sort_local(
+    x_shard: jax.Array, axis_name: str, capacity_factor: float = 2.0
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-device sample sort body.
+
+    Returns ``(sorted_padded, count, overflowed)``: this device's output
+    bucket (ascending, sentinel-padded to the fixed capacity), the number
+    of valid elements, and a global overflow flag (any element dropped
+    anywhere — callers either assert it is false or retry with a larger
+    capacity factor).
+    """
+    p = jax.lax.axis_size(axis_name)
+    m = x_shard.shape[0]
+    cap = int(capacity_factor * m)
+    # round capacity up so it is lane-aligned
+    cap = -(-cap // 128) * 128
+    local = merge_sort(x_shard)
+    # P equispaced local samples as splitter candidates
+    samp_idx = (jnp.arange(p) * m) // p
+    cands = jax.lax.all_gather(local[samp_idx], axis_name, tiled=True)  # (P*P,)
+    cands = merge_sort(cands)
+    splitters = cands[jnp.arange(1, p) * p]  # P-1 global splitters
+    # Bucket k of the (sorted) local shard is the contiguous run
+    # [off[k], off[k+1]); offsets by binary search (merge-path diagonal
+    # search against the splitter "array").
+    offs = jnp.searchsorted(local, splitters, side="left").astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros(1, jnp.int32), offs, jnp.full((1,), m, jnp.int32)])
+    counts = offs[1:] - offs[:-1]  # (P,)
+    overflow_local = jnp.any(counts > cap)
+    sentinel = max_sentinel(local.dtype)
+    lp = jnp.concatenate([local, jnp.full((cap,), sentinel)])
+
+    def take(k):
+        return jax.lax.dynamic_slice(lp, (offs[k],), (cap,))
+
+    send = jax.vmap(take)(jnp.arange(p))  # (P, cap) rows sorted
+    # mask out elements beyond each bucket's count
+    pos = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    send = jnp.where(pos < counts[:, None], send, sentinel)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    recv = recv.reshape(p, cap)  # P sorted runs destined for this device
+    out = _pairwise_tree_merge(recv)  # (P*cap,) ascending, sentinels last
+    count = jnp.sum(jax.lax.all_gather(counts, axis_name, tiled=False), axis=0)[
+        jax.lax.axis_index(axis_name)
+    ]
+    overflow = jax.lax.pmax(overflow_local.astype(jnp.int32), axis_name) > 0
+    return out, count[None], overflow
+
+
+def distributed_sort(
+    x: jax.Array,
+    mesh: Mesh | None = None,
+    axis: str = "x",
+    capacity_factor: float = 2.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample-sort a sharded array; see :func:`distributed_sort_local`."""
+    if mesh is None:
+        mesh = Mesh(jax.devices(), (axis,))
+    fn = shard_map(
+        functools.partial(distributed_sort_local, axis_name=axis, capacity_factor=capacity_factor),
+        mesh=mesh,
+        in_specs=(P(axis),),
+        out_specs=(P(axis), P(axis), P()),
+        check_vma=False,
+    )
+    return fn(x)
+
+
+# ---------------------------------------------------------------------------
+# distributed top-k
+# ---------------------------------------------------------------------------
+
+def distributed_topk_local(
+    x_shard: jax.Array, k: int, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-device body: global (values, indices) top-k of a sharded vector.
+
+    Local merge-path top-k, then an all_gather of the P sorted candidate
+    runs (P*k elements — tiny), then a merge-path tree combine.  Indices
+    are global.  Result is replicated across the axis.
+    """
+    p = jax.lax.axis_size(axis_name)
+    m = x_shard.shape[0]
+    idx0 = jax.lax.axis_index(axis_name) * m
+    lv, li = topk_desc(x_shard, k)
+    li = li.astype(jnp.int32) + idx0
+    # gather candidate runs; merge on negated keys so ascending merge = descending values
+    keys = jax.lax.all_gather(-lv, axis_name, tiled=False)  # (P, k) each ascending
+    idxs = jax.lax.all_gather(li, axis_name, tiled=False)  # (P, k)
+    # tree merge of kv runs
+    from .merge_path import merge_kv
+
+    runs_k, runs_v = keys, idxs
+    r = runs_k.shape[0]
+    target = 1 << max(0, (r - 1).bit_length())
+    if target != r:
+        runs_k = jnp.concatenate(
+            [runs_k, jnp.full((target - r, k), max_sentinel(runs_k.dtype))], axis=0
+        )
+        runs_v = jnp.concatenate([runs_v, jnp.zeros((target - r, k), runs_v.dtype)], axis=0)
+    while runs_k.shape[0] > 1:
+        mk, mv = jax.vmap(merge_kv)(runs_k[0::2], runs_v[0::2], runs_k[1::2], runs_v[1::2])
+        # only the first k of every merged run can survive to the global top-k
+        runs_k, runs_v = mk[:, :k], mv[:, :k]
+    return -runs_k[0], runs_v[0]
+
+
+def distributed_topk(
+    x: jax.Array, k: int, mesh: Mesh | None = None, axis: str = "x"
+) -> Tuple[jax.Array, jax.Array]:
+    if mesh is None:
+        mesh = Mesh(jax.devices(), (axis,))
+    fn = shard_map(
+        functools.partial(distributed_topk_local, k=k, axis_name=axis),
+        mesh=mesh,
+        in_specs=(P(axis),),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(x)

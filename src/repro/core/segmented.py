@@ -1,0 +1,112 @@
+"""Segmented Parallel Merge (SPM) — Algorithm 3 of the paper, in JAX.
+
+The paper breaks the Merge Path into cache-sized (C/3) segments, merging
+one segment at a time with all p cores cooperating, so that everything
+live co-resides in cache.  On TPU the "cache" is VMEM and the production
+form of SPM is the Pallas kernel in ``repro.kernels.merge_path`` (each
+grid step stages <= L elements of each input through VMEM, double-buffered
+by the pipeline).  This module keeps a pure-jnp SPM whose *schedule* is
+the paper's, used as an oracle for the kernel and as the CPU fallback.
+
+Key guarantee (Lemma 16 / Theorem 17): a path segment of length L consumes
+at most L consecutive elements of A and at most L consecutive elements of
+B, and the segment's p sub-partitions can be found from those 2L elements
+alone — so each outer iteration touches a bounded window.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .merge_path import diagonal_intersections, max_sentinel
+
+
+def _window_merge(wa: jax.Array, wb: jax.Array, out_len: int) -> jax.Array:
+    """Merge the first ``out_len`` outputs of two sorted windows.
+
+    Rank-based (the tile form used by the Pallas kernel): cross-ranks via
+    comparisons, then scatter.  Elements whose rank lands beyond
+    ``out_len`` belong to a later segment and are dropped here (they are
+    re-staged by that segment's window — the paper's "not all elements
+    will be used" remark after Thm 17).
+    """
+    L = wa.shape[0]
+    dtype = jnp.result_type(wa, wb)
+    ra = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wb, wa, side="left").astype(jnp.int32)
+    rb = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wa, wb, side="right").astype(jnp.int32)
+    out = jnp.zeros(out_len, dtype)
+    out = out.at[jnp.where(ra < out_len, ra, out_len)].set(wa.astype(dtype), mode="drop")
+    out = out.at[jnp.where(rb < out_len, rb, out_len)].set(wb.astype(dtype), mode="drop")
+    return out
+
+
+def segmented_merge(a: jax.Array, b: jax.Array, segment: int) -> jax.Array:
+    """SPM: merge A and B in output segments of ``segment`` elements.
+
+    A ``lax.scan`` walks the segments in order, carrying the global
+    (a_offset, b_offset) path position — the ``startingPoint`` of
+    Algorithm 3.  Within a segment, work is fully parallel (vectorized
+    rank computation = the p cooperating cores).
+    """
+    na, nb = a.shape[0], b.shape[0]
+    n = na + nb
+    if n % segment != 0:
+        raise ValueError(f"|A|+|B| = {n} must be divisible by segment = {segment}")
+    num_seg = n // segment
+    dtype = jnp.result_type(a, b)
+    # Sentinel-pad so fixed-size windows never read out of bounds; pads are
+    # +inf so they always lose comparisons and ranks stay correct.
+    ap = jnp.concatenate([a.astype(dtype), jnp.full((segment,), max_sentinel(dtype))])
+    bp = jnp.concatenate([b.astype(dtype), jnp.full((segment,), max_sentinel(dtype))])
+
+    def step(carry, _):
+        a_off, b_off = carry
+        wa = jax.lax.dynamic_slice(ap, (a_off,), (segment,))
+        wb = jax.lax.dynamic_slice(bp, (b_off,), (segment,))
+        out = _window_merge(wa, wb, segment)
+        # End-of-segment path position: local diagonal `segment` within the
+        # window == global diagonal advance (Theorem 17).
+        da = diagonal_intersections(wa, wb, jnp.array([segment], jnp.int32))[0]
+        return (a_off + da, b_off + (segment - da)), out
+
+    (_, _), outs = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg)
+    return outs.reshape(n)
+
+
+def segmented_merge_kv(
+    ak: jax.Array, av: jax.Array, bk: jax.Array, bv: jax.Array, segment: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Key-value SPM (stable, A-priority)."""
+    na, nb = ak.shape[0], bk.shape[0]
+    n = na + nb
+    if n % segment != 0:
+        raise ValueError(f"|A|+|B| = {n} must be divisible by segment = {segment}")
+    num_seg = n // segment
+    kd = jnp.result_type(ak, bk)
+    vd = jnp.result_type(av, bv)
+    akp = jnp.concatenate([ak.astype(kd), jnp.full((segment,), max_sentinel(kd))])
+    bkp = jnp.concatenate([bk.astype(kd), jnp.full((segment,), max_sentinel(kd))])
+    avp = jnp.concatenate([av.astype(vd), jnp.zeros((segment,), vd)])
+    bvp = jnp.concatenate([bv.astype(vd), jnp.zeros((segment,), vd)])
+
+    def step(carry, _):
+        a_off, b_off = carry
+        wak = jax.lax.dynamic_slice(akp, (a_off,), (segment,))
+        wbk = jax.lax.dynamic_slice(bkp, (b_off,), (segment,))
+        wav = jax.lax.dynamic_slice(avp, (a_off,), (segment,))
+        wbv = jax.lax.dynamic_slice(bvp, (b_off,), (segment,))
+        L = segment
+        ra = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wbk, wak, side="left").astype(jnp.int32)
+        rb = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wak, wbk, side="right").astype(jnp.int32)
+        ra = jnp.where(ra < L, ra, L)
+        rb = jnp.where(rb < L, rb, L)
+        ko = jnp.zeros(L, kd).at[ra].set(wak, mode="drop").at[rb].set(wbk, mode="drop")
+        vo = jnp.zeros(L, vd).at[ra].set(wav, mode="drop").at[rb].set(wbv, mode="drop")
+        da = diagonal_intersections(wak, wbk, jnp.array([segment], jnp.int32))[0]
+        return (a_off + da, b_off + (segment - da)), (ko, vo)
+
+    (_, _), (ks, vs) = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg)
+    return ks.reshape(n), vs.reshape(n)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the Merge Path hot spots (+ jnp oracles)."""
+
+from . import ops, ref
+from .merge_path import merge_pallas, merge_kv_pallas, DEFAULT_TILE
+
+__all__ = ["ops", "ref", "merge_pallas", "merge_kv_pallas", "DEFAULT_TILE"]

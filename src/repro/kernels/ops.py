@@ -1,0 +1,102 @@
+"""Jitted public wrappers around the Merge Path Pallas kernels.
+
+``merge`` / ``merge_kv`` / ``sort`` / ``sort_kv`` dispatch to the Pallas
+SPM kernel when the problem is big enough to tile, and to the pure-JAX
+core otherwise.  ``interpret`` defaults to True because this build
+environment is CPU-only; on a real TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import merge_path as _mp
+from . import merge_path as _kern
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge(
+    a: jax.Array, b: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True
+) -> jax.Array:
+    """Stable merge of two sorted 1-D arrays (Pallas SPM kernel)."""
+    if a.shape[0] + b.shape[0] <= tile:
+        return _mp.merge(a, b)
+    return _kern.merge_pallas(a, b, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_kv(
+    ak: jax.Array,
+    av: jax.Array,
+    bk: jax.Array,
+    bv: jax.Array,
+    *,
+    tile: int = _kern.DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable key-value merge (Pallas SPM kernel)."""
+    if ak.shape[0] + bk.shape[0] <= tile:
+        return _mp.merge_kv(ak, av, bk, bv)
+    return _kern.merge_kv_pallas(ak, av, bk, bv, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort(x: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True) -> jax.Array:
+    """Bottom-up merge sort whose top rounds use the Pallas merge kernel."""
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    xp = _mp._pad_pow2(x, _mp.max_sentinel(x.dtype))
+    m = xp.shape[0]
+    width = 1
+    while width < m:
+        runs = xp.reshape(-1, 2, width)
+        if 2 * width <= tile:
+            xp = jax.vmap(_mp.merge)(runs[:, 0], runs[:, 1]).reshape(-1)
+        else:
+            pairs = [
+                _kern.merge_pallas(runs[i, 0], runs[i, 1], tile=tile, interpret=interpret)
+                for i in range(runs.shape[0])
+            ]
+            xp = jnp.concatenate(pairs)
+        width *= 2
+    return xp[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_kv(
+    keys: jax.Array,
+    values: jax.Array,
+    *,
+    tile: int = _kern.DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable key-value merge sort; top rounds on the Pallas kernel."""
+    n = keys.shape[0]
+    if n <= 1:
+        return keys, values
+    kp = _mp._pad_pow2(keys, _mp.max_sentinel(keys.dtype))
+    vp = _mp._pad_pow2(values, jnp.zeros((), values.dtype))
+    m = kp.shape[0]
+    width = 1
+    while width < m:
+        kr = kp.reshape(-1, 2, width)
+        vr = vp.reshape(-1, 2, width)
+        if 2 * width <= tile:
+            kp, vp = jax.vmap(_mp.merge_kv)(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
+            kp, vp = kp.reshape(-1), vp.reshape(-1)
+        else:
+            ks, vs = [], []
+            for i in range(kr.shape[0]):
+                ko, vo = _kern.merge_kv_pallas(
+                    kr[i, 0], vr[i, 0], kr[i, 1], vr[i, 1], tile=tile, interpret=interpret
+                )
+                ks.append(ko)
+                vs.append(vo)
+            kp, vp = jnp.concatenate(ks), jnp.concatenate(vs)
+        width *= 2
+    return kp[:n], vp[:n]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Merge Path kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(interpret-mode allclose sweeps in ``tests/test_kernels.py``).  They use
+only ``jax.lax.sort`` / ``jnp`` primitives — no Pallas, no Merge Path
+machinery — so a bug in the kernel cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Stable merge oracle (values only): sort of the concatenation."""
+    dtype = jnp.result_type(a, b)
+    return jnp.sort(jnp.concatenate([a.astype(dtype), b.astype(dtype)]))
+
+
+def merge_kv_ref(
+    ak: jax.Array, av: jax.Array, bk: jax.Array, bv: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable key-value merge oracle with A-priority.
+
+    ``lax.sort`` with ``is_stable=True`` over the concatenation [A; B]
+    preserves A-before-B order among equal keys, which is exactly the
+    paper's path convention (down-moves on ties).
+    """
+    kd = jnp.result_type(ak, bk)
+    vd = jnp.result_type(av, bv)
+    keys = jnp.concatenate([ak.astype(kd), bk.astype(kd)])
+    vals = jnp.concatenate([av.astype(vd), bv.astype(vd)])
+    ks, vs = jax.lax.sort((keys, vals), dimension=0, is_stable=True, num_keys=1)
+    return ks, vs
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    return jnp.sort(x)
+
+
+def sort_kv_ref(keys: jax.Array, values: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    return jax.lax.sort((keys, values), dimension=0, is_stable=True, num_keys=1)

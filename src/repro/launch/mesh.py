@@ -1,0 +1,45 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Per spec: single pod = (data=16, model=16)
+= 256 chips; multi-pod = (pod=2, data=16, model=16) = 512 chips.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) > n:
+        # dry-run environment exposes 512 host devices; the single-pod mesh
+        # uses the first 256.
+        return Mesh(np.array(devs[:n]).reshape(shape), axes)
+    raise RuntimeError(
+        f"mesh {shape} needs {n} devices, found {len(devs)} — "
+        "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+        "(launch/dryrun.py sets this automatically)"
+    )
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for multi-device CPU tests (8 fake devices)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = data * model
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n]).reshape(data, model), ("data", "model"))

@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (v5e):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / (LINKS_PER_CHIP * ICI_BW)
+
+``cost_analysis()`` of the compiled (post-SPMD) executable gives
+per-device FLOPs and bytes.  Collective bytes are not in cost_analysis:
+we parse the optimized HLO text, sum result-shape bytes of every
+collective op, and apply ring-cost multipliers (all-reduce 2x for its
+reduce-scatter+all-gather decomposition; others 1x — the (n-1)/n ring
+factor is ~1 at n >= 16 and is absorbed into the multiplier).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# --- TPU v5e constants (per chip) ---
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+LINKS_PER_CHIP = 4  # 2D torus
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+# matches e.g. "bf16[16,128,2048]{2,1,0}" ; scalars "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line: "  %name = <shape or tuple> <opcode>("
+_OP_RE = re.compile(
+    r"=\s*((?:\(?[\w\[\],{}\s/#*]*?\)?))\s*(" + "|".join(_COLL_KINDS) + r")(-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum wire bytes (with multipliers) per collective kind.
+
+    CPU-backend note: the SPMD partitioner *promotes* bf16 reductions to
+    f32 (``to_apply=%add...clone_promoted`` + convert before/after); a
+    real TPU reduces in bf16.  Promoted reduces are counted at half their
+    printed bytes so the roofline reflects the TPU wire format.
+    """
+    out = {k: 0.0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    promoted_correction = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = _shape_bytes(shape_txt) * _MULT[kind]
+        if "clone_promoted" in line and "f32[" in shape_txt:
+            promoted_correction += nbytes / 2
+            nbytes /= 2
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["counts"] = counts  # type: ignore
+    out["promoted_bf16_correction"] = promoted_correction  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collective_detail: Dict[str, float]
+    chips: int
+    model_flops: float  # 6*N*D (train) or 2*N_active*D (inference), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / (LINKS_PER_CHIP * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops across all chips)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline MFU: model flops / (chips * peak * t_step)."""
+        denom = self.chips * PEAK_FLOPS * self.t_step
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "collective_detail": self.collective_detail,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_step_s": self.t_step,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for train, 2*N_active*D for inference (D = tokens processed)."""
+    n_active = cfg.n_active_params()
+    if shape.mode == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d
+    if shape.mode == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d
+    # decode: one token per row
+    return 2.0 * n_active * shape.global_batch
+
+
+def build(compiled_cost: Dict, hlo_text: str, chips: int, mflops: float) -> Roofline:
+    colls = collective_bytes(hlo_text)
+    wire = sum(v for k, v in colls.items() if k in _COLL_KINDS)
+    return Roofline(
+        flops_per_device=float(compiled_cost.get("flops", 0.0)),
+        bytes_per_device=float(compiled_cost.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=wire,
+        collective_detail=colls,
+        chips=chips,
+        model_flops=mflops,
+    )

@@ -1,0 +1,21 @@
+from .model import (
+    init_params,
+    abstract_params,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_caches,
+    abstract_caches,
+    encoder_forward,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_caches",
+    "abstract_caches",
+    "encoder_forward",
+]

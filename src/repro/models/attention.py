@@ -1,0 +1,228 @@
+"""Attention: full / blockwise (online-softmax) / sliding-window / decode.
+
+All variants share one set of projections; the score/softmax path is
+chosen by sequence length and window config so that every assigned
+shape cell lowers with bounded live memory:
+
+* ``seq <= full_threshold``: dense masked attention (train_4k).
+* longer: blockwise attention — ``lax.scan`` over KV chunks with a
+  running (max, denom, acc) online softmax (prefill_32k).
+* ``window > 0``: sliding-window mask (and a ring-buffer cache on the
+  decode path), used by gemma3 local layers and hymba.
+* decode: single-query attention over a cache; optionally
+  context-parallel over the ``model`` axis (see serving.engine).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from .layers import apply_rope, make_rope
+
+NEG_INF = -1e30
+FULL_ATTENTION_THRESHOLD = 8192
+
+
+def qkv_proj(params: Dict, x: jax.Array, num_heads: int, num_kv: int, head_dim: int):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,K,hd)."""
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, num_kv, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, num_kv, head_dim)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+    k = constrain(k, "act_batch", "act_seq", None, None)
+    v = constrain(v, "act_batch", "act_seq", None, None)
+    return q, k, v
+
+
+def _mask(
+    qpos: jax.Array,  # (Sq,) absolute positions of queries
+    kpos: jax.Array,  # (Sk,)
+    kind: str,  # causal | full | prefix
+    window: int,
+    prefix_len: int,
+) -> jax.Array:
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if kind == "causal" or kind == "prefix":
+        m = kpos[None, :] <= qpos[:, None]
+        if kind == "prefix":
+            m = m | (kpos[None, :] < prefix_len)
+    if window > 0:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, softcap: float) -> jax.Array:
+    """q (B,Sq,K,G,hd), k/v (B,Sk,K,hd), mask (Sq,Sk) -> (B,Sq,K,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) / math.sqrt(hd)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _blockwise(q, k, v, qpos, kind, window, prefix_len, chunk, softcap) -> jax.Array:
+    """Online-softmax over KV chunks; q (B,Sq,K,G,hd), k/v (B,Sk,K,hd)."""
+    b, sq, kh, g, hd = q.shape
+    sk = k.shape[1]
+    from repro.utils.costmode import cost_exact
+
+    if cost_exact():
+        # bound unrolled chunk count: flops identical, compile stays small
+        chunk = max(chunk, -(-sk // 8))
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, ci = xs
+        kpos = ci * chunk + jnp.arange(chunk)
+        msk = _mask(qpos, kpos, kind, window, prefix_len) & (kpos < sk)[None, :]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kb.astype(jnp.float32)) / math.sqrt(hd)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m_run - m_new)
+        l_new = l_run * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kh, g, sq, hd), jnp.float32)
+    from repro.utils.costmode import scan_unroll
+
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(nchunks)), unroll=scan_unroll(nchunks)
+    )
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,K,G,hd)
+
+
+def attention(
+    params: Dict,
+    x: jax.Array,
+    *,
+    num_heads: int,
+    num_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    positions: jax.Array,  # (S,) absolute positions
+    kind: str = "causal",
+    window: int = 0,
+    prefix_len: int = 0,
+    chunk: int = 1024,
+    softcap: float = 0.0,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attention K/V source
+    force_blockwise: bool = False,
+) -> jax.Array:
+    """Self (or cross, if kv given) attention; x (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    g = num_heads // num_kv
+    if kv is None:
+        q, k, v = qkv_proj(params, x, num_heads, num_kv, head_dim)
+        if rope_theta > 0:
+            sin, cos = make_rope(positions, head_dim, rope_theta)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        kpos = positions
+    else:
+        k, v = kv  # (B,Sk,K,hd) precomputed (encoder output projections)
+        q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+        kind = "full"
+        kpos = jnp.arange(k.shape[1])
+    qh = q.reshape(b, s, num_kv, g, head_dim)
+    if k.shape[1] <= FULL_ATTENTION_THRESHOLD and not force_blockwise:
+        mask = _mask(positions, kpos, kind, window, prefix_len)
+        out = _sdpa(qh, k, v, mask, softcap)
+    else:
+        out = _blockwise(qh, k, v, positions, kind, window, prefix_len, chunk, softcap)
+    out = out.reshape(b, s, num_heads * head_dim)
+    out = constrain(out, "act_batch", "act_seq", "act_heads")
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode path (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    params: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache_k: jax.Array,  # (B, S_cache, K, hd) — ring buffer if window > 0
+    cache_v: jax.Array,
+    pos: jax.Array,  # (B,) absolute position of the new token
+    *,
+    num_heads: int,
+    num_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out (B,1,d), new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    g = num_heads // num_kv
+    q = (x @ params["wq"]).reshape(b, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, num_kv, head_dim)
+    v = (x @ params["wv"]).reshape(b, num_kv, head_dim)
+    if rope_theta > 0:
+        sin, cos = make_rope(pos[:, None], head_dim, rope_theta)  # (B,1,half)
+        q = apply_rope(q.reshape(b, 1, num_heads, head_dim), sin, cos).reshape(b, num_heads, head_dim)
+        k = apply_rope(k.reshape(b, 1, num_kv, head_dim), sin, cos).reshape(b, num_kv, head_dim)
+    if window > 0:
+        slot = pos % s_cache
+    else:
+        slot = jnp.minimum(pos, s_cache - 1)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, slot].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, slot].set(v.astype(cache_v.dtype))
+    cache_k = constrain(cache_k, "act_batch", "act_kv_seq", None, None)
+    cache_v = constrain(cache_v, "act_batch", "act_kv_seq", None, None)
+    # absolute position held by each cache slot
+    ridx = jnp.arange(s_cache)[None, :]
+    if window > 0:
+        kpos = pos[:, None] - ((pos[:, None] - ridx) % s_cache)
+    else:
+        kpos = ridx * jnp.ones((b, 1), jnp.int32)
+    valid = (kpos <= pos[:, None]) & (kpos >= 0)
+    if window > 0:
+        valid = valid & (kpos > pos[:, None] - window)
+    qh = q.reshape(b, num_kv, g, head_dim)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qh, cache_k).astype(jnp.float32) / math.sqrt(head_dim)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, cache_v)
+    out = out.reshape(b, 1, num_heads * head_dim)
+    return out @ params["wo"], cache_k, cache_v
+
+
+def cross_decode_attention(params, x, xk, xv, *, num_heads, num_kv, head_dim):
+    """Cross-attention for one decode step; xk/xv (B,Senc,K,hd)."""
+    b = x.shape[0]
+    g = num_heads // num_kv
+    q = (x @ params["wq"]).reshape(b, num_kv, g, head_dim)
+    scores = jnp.einsum("bkgh,bskh->bkgs", q, xk).astype(jnp.float32) / math.sqrt(head_dim)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, xv).reshape(b, 1, num_heads * head_dim)
+    return out @ params["wo"]

@@ -1,0 +1,95 @@
+"""Shared neural-net layers (functional, params = pytrees of jnp arrays)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def make_rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """Rotary embedding tables for integer ``positions`` (any shape).
+
+    Returns (sin, cos) with trailing dim head_dim//2, float32.
+    """
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Apply rotary embedding; x (..., heads, head_dim), sin/cos (..., head_dim//2).
+
+    sin/cos broadcast over the heads axis (inserted at -2).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings (num_pos, d)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    angles = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def _act(name: str, gate: Optional[jax.Array], up: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(gate) * up
+    if name == "gelu_gated":
+        return jax.nn.gelu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(up)
+    if name == "relu2":
+        r = jax.nn.relu(up)
+        return r * r
+    raise ValueError(f"unknown act {name}")
+
+
+def mlp_gated(name: str) -> bool:
+    return name in ("silu", "gelu_gated")
+
+
+def mlp_apply(params: Dict, x: jax.Array, act: str) -> jax.Array:
+    """Dense MLP. x (..., d) -> (..., d)."""
+    up = x @ params["wi"]
+    gate = x @ params["wg"] if "wg" in params else None
+    h = _act(act, gate, up)
+    h = constrain(h, "act_batch", "act_seq", "act_ff")
+    return h @ params["wo"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "wi": (jax.random.normal(k1, (d_model, d_ff), jnp.float32) * scale_in).astype(dtype),
+        "wo": (jax.random.normal(k2, (d_ff, d_model), jnp.float32) * scale_out).astype(dtype),
+    }
+    if mlp_gated(act):
+        p["wg"] = (jax.random.normal(k3, (d_model, d_ff), jnp.float32) * scale_in).astype(dtype)
+    return p
+
+
+def dense_init(key, shape, fan_in: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)

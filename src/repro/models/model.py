@@ -1,0 +1,250 @@
+"""Top-level model API: embed -> stack -> logits, all modes, all families."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSM, HYBRID, VLM, AUDIO
+from repro.parallel.sharding import constrain
+from . import attention as attn_mod
+from . import ssm as ssm_mod
+from .layers import rms_norm, sinusoidal_positions
+from .transformer import (
+    _dtype,
+    _group_windows,
+    _stack_params,
+    init_params,
+    abstract_params,
+    stack_forward,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_caches",
+    "encoder_forward",
+]
+
+
+def _embed(cfg: ModelConfig, params: Dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"]["table"][tokens]
+    x = x * jnp.sqrt(jnp.array(cfg.d_model, x.dtype))
+    return constrain(x, "act_batch", "act_seq", "act_embed")
+
+
+def _logits(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["unembed"]
+    return constrain(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def encoder_forward(cfg: ModelConfig, params: Dict, frames: jax.Array):
+    """Whisper encoder over precomputed frame embeddings (stub frontend).
+
+    frames (B, S_enc, d) -> per-decoder-layer cross K/V (L, B, S_enc, K, hd).
+    """
+    enc = params["encoder"]
+    x = frames @ enc["frame_proj"]
+    x = x + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(frames.shape[1])
+    # encoder scan reuses the decoder group machinery with kind=full
+    import dataclasses
+
+    enc_cfg = dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, global_every=0, sliding_window=0,
+        num_experts=0, experts_per_token=0,
+    )
+    x, _ = stack_forward(enc_cfg, enc["layers"], x, positions, kind="full")
+    x = rms_norm(x, enc["final_norm"], cfg.rms_eps)
+    # per-decoder-layer cross projections
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+
+    def proj(cross_p):
+        k = (x @ cross_p["wk"]).reshape(b, s, kv, hd)
+        v = (x @ cross_p["wv"]).reshape(b, s, kv, hd)
+        return k, v
+
+    ek, ev = jax.vmap(proj)(params["layers"]["cross"])  # (L,B,S,K,hd)
+    return ek, ev
+
+
+def _prepare_inputs(cfg: ModelConfig, params: Dict, batch: Dict):
+    """Embed tokens (+ modality prefixes); returns (x, positions, kind, prefix_len, enc_kv)."""
+    kind = "causal"
+    prefix_len = 0
+    enc_kv = None
+    if cfg.family == AUDIO:
+        enc_kv = encoder_forward(cfg, params, batch["frames"])
+        x = _embed(cfg, params, batch["tokens"])
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(x.shape[1])
+        return x, positions, kind, prefix_len, enc_kv
+    if cfg.family == VLM and "prefix_emb" in batch:
+        pre = (batch["prefix_emb"] @ params["prefix_proj"]).astype(_dtype(cfg))
+        tok = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([pre, tok], axis=1)
+        kind = "prefix"
+        prefix_len = pre.shape[1]
+    else:
+        x = _embed(cfg, params, batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    return x, positions, kind, prefix_len, enc_kv
+
+
+def forward_train(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Returns logits aligned with batch['labels']."""
+    x, positions, kind, prefix_len, enc_kv = _prepare_inputs(cfg, params, batch)
+    x, _ = stack_forward(
+        cfg, params["layers"], x, positions, kind=kind, prefix_len=prefix_len,
+        enc_kv_layers=enc_kv,
+    )
+    if cfg.family == VLM and prefix_len:
+        x = x[:, prefix_len:]
+    return _logits(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    """Zero caches for decode: {'sub<i>': tree with leading (num_groups,)}."""
+    dtype = _dtype(cfg)
+    gp = cfg.layer_group
+    ng = cfg.num_layers // gp
+    windows = _group_windows(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    caches: Dict[str, Any] = {}
+    for i in range(gp):
+        sub: Dict[str, Any] = {}
+        if cfg.family != SSM:
+            w = windows[i]
+            clen = min(cache_len, w) if w else cache_len
+            sub["k"] = jnp.zeros((ng, batch, clen, kv, hd), dtype)
+            sub["v"] = jnp.zeros((ng, batch, clen, kv, hd), dtype)
+        if cfg.family in (SSM, HYBRID):
+            sub["conv"] = jnp.zeros((ng, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+            sub["ssm"] = jnp.zeros((ng, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        caches[f"sub{i}"] = sub
+    return caches
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def forward_prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache_len: int = 0):
+    """Run the prompt; returns (last-position logits, caches, [enc_kv])."""
+    x, positions, kind, prefix_len, enc_kv = _prepare_inputs(cfg, params, batch)
+    cache_len = cache_len or x.shape[1]
+    x, caches = stack_forward(
+        cfg, params["layers"], x, positions, kind=kind, prefix_len=prefix_len,
+        enc_kv_layers=enc_kv, collect_caches=True, cache_len=cache_len,
+    )
+    logits = _logits(cfg, params, x[:, -1:])[:, 0]
+    return logits, caches, enc_kv
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _layer_decode(cfg: ModelConfig, p: Dict, x, cache: Dict, pos, window: int, enc_kv):
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["attn_norm"], cfg.rms_eps)
+    mix = jnp.zeros_like(x)
+    if "attn" in p:
+        out, ck, cv = attn_mod.decode_attention(
+            p["attn"], h, cache["k"], cache["v"], pos,
+            num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=window, softcap=cfg.attn_logit_softcap,
+        )
+        mix = mix + out
+        new_cache["k"], new_cache["v"] = ck, cv
+    if "mamba" in p:
+        y, conv_st, ssm_st = ssm_mod.mamba_decode(
+            p["mamba"], h, cache["conv"], cache["ssm"], cfg
+        )
+        mix = mix + y
+        new_cache["conv"], new_cache["ssm"] = conv_st, ssm_st
+    x = x + mix
+    if "cross" in p and enc_kv is not None:
+        hc = rms_norm(x, p["cross_norm"], cfg.rms_eps)
+        x = x + attn_mod.cross_decode_attention(
+            p["cross"], hc, enc_kv[0], enc_kv[1],
+            num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+        )
+    if "ffn_norm" in p:
+        hf = rms_norm(x, p["ffn_norm"], cfg.rms_eps)
+        if "moe" in p:
+            from . import moe as moe_mod
+
+            x = x + moe_mod.moe_apply(p["moe"], hf, cfg)
+        else:
+            from .layers import mlp_apply
+
+            x = x + mlp_apply(p["mlp"], hf, cfg.act)
+    return x, new_cache
+
+
+def forward_decode(
+    cfg: ModelConfig,
+    params: Dict,
+    caches: Dict,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # (B,) absolute position of `token`
+    enc_kv=None,  # (L,B,Senc,K,hd) x2 for enc-dec
+) -> Tuple[jax.Array, Dict]:
+    """One decode step; returns (logits (B,V), new caches)."""
+    x = _embed(cfg, params, token)
+    if cfg.family == AUDIO:
+        # absolute sinusoidal position for the new token
+        table = sinusoidal_positions(int(caches["sub0"]["k"].shape[2]) + 1, cfg.d_model)
+        x = x + table[pos][:, None].astype(x.dtype)
+    gp = cfg.layer_group
+    windows = _group_windows(cfg)
+    stacked = _stack_params(cfg, params["layers"])
+    xs = [stacked, caches]
+    if enc_kv is not None:
+        ng = cfg.num_layers // gp
+        ek = enc_kv[0].reshape(ng, gp, *enc_kv[0].shape[1:])
+        ev = enc_kv[1].reshape(ng, gp, *enc_kv[1].shape[1:])
+        xs.append((ek, ev))
+
+    def body(xcarry, xs_g):
+        if enc_kv is not None:
+            gparams, caches_g, (ekg, evg) = xs_g
+        else:
+            gparams, caches_g = xs_g
+            ekg = evg = None
+        new_g = {}
+        for i in range(gp):
+            p_i = jax.tree.map(lambda t: t[i], gparams)
+            ekv = (ekg[i], evg[i]) if ekg is not None else None
+            xcarry, nc = _layer_decode(cfg, p_i, xcarry, caches_g[f"sub{i}"], pos, windows[i], ekv)
+            new_g[f"sub{i}"] = nc
+        return xcarry, new_g
+
+    from repro.utils.costmode import scan_unroll
+
+    ng = cfg.num_layers // gp
+    x, new_caches = jax.lax.scan(body, x, tuple(xs), unroll=scan_unroll(ng))
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, new_caches

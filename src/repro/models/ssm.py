@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM block (falcon-mamba, hymba's mamba heads).
+
+TPU adaptation: the CUDA "hardware-aware" kernel (fused recurrent scan in
+SRAM) becomes a **chunked associative scan**: ``lax.scan`` over sequence
+chunks (bounding materialized state to one chunk) with a parallel
+``lax.associative_scan`` inside each chunk (log-depth on the VPU).  The
+(decay, update) pairs form the standard linear-recurrence monoid
+``(a2, b2) ∘ (a1, b1) = (a1*a2, b1*a2 + b2)``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .layers import dense_init
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d, di, st, r, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di), d, dtype),
+        "conv_w": dense_init(keys[1], (di, k), k, dtype),
+        "x_proj": dense_init(keys[2], (di, r + 2 * st), di, dtype),
+        "dt_proj": dense_init(keys[3], (r, di), r, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(a).astype(jnp.float32),  # kept f32 (exp of it is sensitive)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[4], (di, d), di, dtype),
+    }
+
+
+def _ssm_scan_chunked(decay: jax.Array, upd: jax.Array, h0: jax.Array, chunk: int):
+    """Linear recurrence h_t = decay_t * h_{t-1} + upd_t, chunked.
+
+    decay/upd (B, S, di, st) f32; h0 (B, di, st).  Returns (ys (B,S,di,st), h_final).
+    """
+    b, s, di, st = decay.shape
+    from repro.utils.costmode import cost_exact
+
+    if cost_exact():
+        # one associative scan over the whole sequence: loop-free HLO so
+        # cost_analysis is exact (the chunked form hides trips in a While)
+        chunk = s
+    chunk = min(chunk, s)
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        # identity steps: decay 1, update 0 — h_final is preserved
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        upd = jnp.pad(upd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dec_c = decay.reshape(b, nchunks, chunk, di, st).transpose(1, 0, 2, 3, 4)
+    upd_c = upd.reshape(b, nchunks, chunk, di, st).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, xs):
+        dec, up = xs  # (B, chunk, di, st)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (dec, up), axis=1)
+        ys = a_cum * h[:, None] + b_cum
+        return ys[:, -1], ys
+
+    from repro.utils.costmode import scan_unroll
+
+    h_final, ys = jax.lax.scan(step, h0, (dec_c, upd_c), unroll=scan_unroll(nchunks))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, di, st)[:, :s]
+    return ys, h_final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv; x (B,S,di), w (di,k), state (B,k-1,di) or None."""
+    k = w.shape[1]
+    if state is None:
+        xpad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xpad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # windowed sum: out_t = sum_i w[:, i] * xpad[:, t + i]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xpad[:, i : i + x.shape[1]] * w[None, None, :, i]
+    new_state = xpad[:, -(k - 1) :] if k > 1 else None
+    return out, new_state
+
+
+def mamba_forward(
+    params: Dict, x: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Training/prefill form; x (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    di, st, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ params["in_proj"]  # (B,S,2di)
+    xz = constrain(xz, "act_batch", "act_seq", "act_ff")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xin, params["conv_w"], None)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"]  # (B,S,r+2st)
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])  # (di, st)
+    sdt = jnp.dtype(cfg.ssm_scan_dtype)
+    decay = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)  # (B,S,di,st)
+    upd = ((dt[..., None] * bmat.astype(jnp.float32)[:, :, None, :])
+           * xc.astype(jnp.float32)[..., None]).astype(sdt)
+    h0 = jnp.zeros((b, di, st), sdt)
+    hs, _ = _ssm_scan_chunked(decay, upd, h0, cfg.ssm_chunk)
+    hs = hs.astype(jnp.float32)
+    y = jnp.sum(hs * cmat.astype(jnp.float32)[:, :, None, :], axis=-1)  # (B,S,di)
+    y = (y + params["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "act_batch", "act_seq", "act_ff")
+    return y @ params["out_proj"]
+
+
+def mamba_decode(
+    params: Dict,
+    x: jax.Array,  # (B,1,d)
+    conv_state: jax.Array,  # (B, k-1, di)
+    ssm_state: jax.Array,  # (B, di, st) f32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) decode step; returns (out (B,1,d), conv_state', ssm_state')."""
+    b = x.shape[0]
+    di, st, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    xc, new_conv = _causal_conv(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)[:, 0]  # (B,di)
+    proj = xc @ params["x_proj"]
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt[..., None] * a[None])  # (B,di,st)
+    upd = (dt[..., None] * bmat.astype(jnp.float32)[:, None, :]) * xc.astype(jnp.float32)[..., None]
+    h = decay * ssm_state + upd
+    y = jnp.sum(h * cmat.astype(jnp.float32)[:, None, :], axis=-1)  # (B,di)
+    y = (y + params["D"][None] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]  # (B,1,di)
+    return y @ params["out_proj"], new_conv, h
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,79 @@
+"""AdamW with cosine schedule, global-norm clip, and optional gradient
+compression for the cross-pod all-reduce (top-k error feedback / int8).
+
+Params are stored fp32 (masters); the model casts to cfg.dtype at use.
+Optimizer state is sharded like the params (FSDP), see parallel.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def cosine_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(1, tcfg.warmup_steps), 1.0)
+    prog = jnp.clip(
+        (step - tcfg.warmup_steps) / jnp.maximum(1, tcfg.total_steps - tcfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros(), "v": zeros()}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    tcfg: TrainConfig,
+    params,
+    grads,
+    opt_state: Dict[str, Any],
+    step: jax.Array,
+):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+    lr = cosine_schedule(tcfg, step)
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        p32 = p.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + eps) + wd * p32
+        return (p32 - lr * step_).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,68 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+At 2+ pods the pod-level gradient reduction crosses the (slow) DCI, so
+the framework offers two compressors, applied leaf-wise before the pod
+all-reduce, with the residual kept locally (error feedback) so the
+compression is unbiased over time:
+
+* ``topk``: keep the top f-fraction of |g| entries (selected with the
+  merge-path top-k — the paper's technique again), zero the rest, and
+  add the zeroed part to a persistent error buffer that is re-injected
+  next step.
+* ``int8``: per-leaf symmetric int8 quantization (scale = max|g|/127),
+  residual also fed back.
+
+These run *inside* jit; the all-reduce itself is whatever XLA emits for
+the psum over the ``pod`` axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk_desc
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_leaf(g: jax.Array, err: jax.Array, frac: float):
+    g = g.astype(jnp.float32) + err
+    flat = g.reshape(-1)
+    k = max(1, int(frac * flat.shape[0]))
+    if flat.shape[0] <= 65536:
+        # merge-path top-k on |g| gives the exact threshold
+        vals, _ = topk_desc(jnp.abs(flat), k)
+        thresh = vals[-1]
+    else:
+        # large leaves: quantile threshold (XLA sort) — same mask semantics
+        thresh = jnp.quantile(jnp.abs(flat), 1.0 - frac)
+    mask = (jnp.abs(flat) >= thresh).astype(jnp.float32)
+    kept = flat * mask
+    new_err = (flat - kept).reshape(g.shape)
+    return kept.reshape(g.shape), new_err
+
+
+def _int8_leaf(g: jax.Array, err: jax.Array):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def compress_grads(
+    grads, err_state, method: str, topk_frac: float
+) -> Tuple[Any, Any]:
+    """Returns (compressed_grads, new_error_state)."""
+    if method == "none":
+        return grads, err_state
+    fn = (lambda g, e: _topk_leaf(g, e, topk_frac)) if method == "topk" else _int8_leaf
+    out = jax.tree.map(fn, grads, err_state)
+    comp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, err

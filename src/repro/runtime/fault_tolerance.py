@@ -1,0 +1,128 @@
+"""Fault tolerance: heartbeat failure detection, straggler watch, elastic remesh.
+
+On a real multi-host deployment these hook the coordination service
+(heartbeats via the distributed KV store, SIGTERM-driven preemption
+notices).  The logic itself is host-side and is unit-tested here with
+simulated clocks/failures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Declares a host dead after ``timeout`` seconds of silence."""
+
+    num_hosts: int
+    timeout: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last_seen = {h: now for h in range(self.num_hosts)}
+
+    def beat(self, host: int) -> None:
+        self.last_seen[host] = self.clock()
+
+    def dead_hosts(self) -> List[int]:
+        now = self.clock()
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout]
+
+    def healthy(self) -> bool:
+        return not self.dead_hosts()
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags steps slower than ``factor`` x the rolling median.
+
+    Mitigation at the framework level: a flagged straggler triggers (a)
+    logging + metric export, and (b) after ``patience`` consecutive
+    flags, an elastic remesh request that excludes the slow host (the
+    same restart path as a failure, but planned).
+    """
+
+    window: int = 50
+    factor: float = 2.0
+    patience: int = 5
+
+    def __post_init__(self):
+        self.times: List[float] = []
+        self.flags = 0
+
+    def record(self, step_time: float) -> bool:
+        med = sorted(self.times)[len(self.times) // 2] if self.times else step_time
+        self.times.append(step_time)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        slow = len(self.times) > 5 and step_time > self.factor * med
+        self.flags = self.flags + 1 if slow else 0
+        return slow
+
+    def should_remesh(self) -> bool:
+        return self.flags >= self.patience
+
+
+def plan_elastic_mesh(
+    available_chips: int,
+    model_parallel: int,
+    prefer_pods: bool = True,
+    chips_per_pod: int = 256,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable (pod, data, model) mesh from surviving chips.
+
+    Keeps the tensor-parallel degree fixed (param shardings stay valid)
+    and shrinks the data/pod axes — restore then re-device_puts the
+    checkpoint onto the new mesh (checkpoint.manager.restore).
+    """
+    if available_chips < model_parallel:
+        raise ValueError(f"need >= {model_parallel} chips, have {available_chips}")
+    pods = available_chips // chips_per_pod
+    if prefer_pods and pods >= 2:
+        data = chips_per_pod // model_parallel
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    data = available_chips // model_parallel
+    # largest power-of-two data degree keeps batch divisibility simple
+    data = 1 << int(math.log2(data))
+    return (data, model_parallel), ("data", "model")
+
+
+@dataclasses.dataclass
+class TrainLoopSupervisor:
+    """Wraps the step loop: checkpoint cadence, failure injection hooks,
+    restore-and-continue semantics.  Used by launch/train.py and the
+    fault-tolerance tests."""
+
+    checkpoint_every: int
+    max_failures: int = 3
+
+    def __post_init__(self):
+        self.failures = 0
+
+    def run(
+        self,
+        start_step: int,
+        total_steps: int,
+        step_fn: Callable[[int], None],
+        save_fn: Callable[[int], None],
+        restore_fn: Callable[[], int],
+    ) -> int:
+        """Runs steps with restart-on-exception; returns final step."""
+        step = start_step
+        while step < total_steps:
+            try:
+                step_fn(step)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    save_fn(step)
+            except Exception:
+                self.failures += 1
+                if self.failures > self.max_failures:
+                    raise
+                step = restore_fn()
+        return step

@@ -1,0 +1,68 @@
+"""Context-parallel decode attention (beyond-paper optimization).
+
+For long-context decode (long_500k) the KV cache's sequence dim is
+sharded over the ``model`` axis.  Left to GSPMD, the attention einsum
+triggers an all-gather of the cache (O(S) wire bytes per step).  This
+module computes attention *locally per shard* and combines with an
+online-softmax (max / sum / weighted-value) reduction — O(heads x
+head_dim) wire bytes per step instead of O(S).
+
+This is the same merge-of-partial-results shape as the paper's
+Theorem 5 (independent segment merges + cheap combine), applied to
+softmax attention over a sequence-partitioned cache.
+
+Used via ``shard_map`` inside the jitted decode step when
+``rules.context`` is set and the engine enables it (hillclimb variant
+``context_parallel_combine``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_partial_attention(
+    q: jax.Array,  # (B, K, G, hd) — replicated across the context axis
+    k_shard: jax.Array,  # (B, S_local, K, hd)
+    v_shard: jax.Array,  # (B, S_local, K, hd)
+    valid: jax.Array,  # (B, S_local) bool
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard (m, l, o): running max, normalizer, weighted values."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k_shard).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)  # (B,K,G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_shard.dtype), v_shard).astype(jnp.float32)
+    return m, l, o
+
+
+def combine_partials(m, l, o, axis_name: str):
+    """Online-softmax combine across the context axis (psum-style).
+
+    wire bytes: 2*(B*K*G) + B*K*G*hd floats — independent of S.
+    """
+    m_glob = jax.lax.pmax(m, axis_name)
+    scale = jnp.exp(m - m_glob)
+    l_scaled = l * scale
+    o_scaled = o * scale[..., None]
+    l_glob = jax.lax.psum(l_scaled, axis_name)
+    o_glob = jax.lax.psum(o_scaled, axis_name)
+    return o_glob / jnp.maximum(l_glob[..., None], 1e-30)
+
+
+def context_parallel_decode_attention(
+    q: jax.Array,  # (B, K, G, hd)
+    k_shard: jax.Array,
+    v_shard: jax.Array,
+    valid: jax.Array,
+    axis_name: str,
+) -> jax.Array:
+    """Full context-parallel decode attention body (inside shard_map)."""
+    m, l, o = local_partial_attention(q, k_shard, v_shard, valid)
+    return combine_partials(m, l, o, axis_name)

@@ -1,0 +1,49 @@
+"""Token samplers built on the merge-path top-k (paper integration #2).
+
+``topk_sample`` uses ``repro.core.topk_desc`` per batch row; on a
+vocab-sharded mesh the serving engine swaps in
+``repro.core.distributed_topk`` whose combine step is a tree of
+merge-path merges (see core/distributed.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk_desc
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def topk_sample(
+    logits: jax.Array,  # (B, V)
+    key: jax.Array,
+    k: int = 40,
+    temperature: float = 1.0,
+) -> jax.Array:
+    vals, idx = jax.vmap(lambda row: topk_desc(row, k))(logits)
+    probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
+    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+
+def topp_sample(
+    logits: jax.Array,
+    key: jax.Array,
+    p: float = 0.9,
+    k_max: int = 128,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """Nucleus sampling over the merge-path-sorted top-k_max candidates."""
+    vals, idx = jax.vmap(lambda row: topk_desc(row, k_max))(logits)
+    probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = cum - probs < p  # always keeps the first candidate
+    probs = jnp.where(keep, probs, 0.0)
+    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)

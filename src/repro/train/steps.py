@@ -1,0 +1,133 @@
+"""train_step / serve-step builders: loss, grads, optimizer, sharding glue.
+
+``make_train_step(cfg, tcfg)`` returns a pure ``(state, batch) -> (state,
+metrics)`` function suitable for ``jax.jit`` with in/out shardings from
+``parallel.sharding``; the dry-run lowers exactly this function.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import forward_train, forward_decode, forward_prefill, init_params
+from repro.optim.adamw import adamw_update, init_opt_state
+from repro.parallel import compression
+from repro.parallel.sharding import constrain
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, z_loss: float
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean token CE (fp32) + z-loss; labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce) / denom
+    zl = z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+    metrics = {"ce": loss, "z_loss": zl}
+    return loss + zl, metrics
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key: jax.Array) -> Dict[str, Any]:
+    params = init_params(cfg, key)
+    # fp32 masters
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "opt": init_opt_state(params),
+    }
+    if tcfg.grad_compression != "none":
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig):
+    return jax.eval_shape(lambda k: init_train_state(cfg, tcfg, k), jax.random.key(0))
+
+
+def _cast(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.dtype == jnp.float32 and p.ndim > 1 else p, params
+    )
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        logits = forward_train(cfg, _cast(params, compute_dtype), batch)
+        return cross_entropy_loss(logits, batch["labels"], tcfg.z_loss)
+
+    def grads_of(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            nm = tcfg.microbatch
+            b = batch["tokens"].shape[0]
+            assert b % nm == 0, f"batch {b} % microbatch {nm} != 0"
+            mb = jax.tree.map(lambda t: t.reshape(nm, b // nm, *t.shape[1:]), batch)
+
+            def acc_step(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mbatch)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            from repro.utils.costmode import scan_unroll
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), mb, unroll=scan_unroll(nm))
+            g = jax.tree.map(lambda t: t / nm, g)
+            return loss / nm, {}, g
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, g
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if tcfg.grad_compression != "none":
+            grads, new_err = compression.compress_grads(
+                grads, state["err"], tcfg.grad_compression, tcfg.compression_topk
+            )
+            new_state["err"] = new_err
+        params, opt, opt_metrics = adamw_update(
+            tcfg, state["params"], grads, state["opt"], state["step"]
+        )
+        new_state.update(step=state["step"] + 1, params=params, opt=opt)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps (dry-run entry points; the full engine lives in serving/)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def prefill_step(params, batch):
+        logits, caches, enc_kv = forward_prefill(cfg, _cast(params, compute_dtype), batch)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def decode_step(params, caches, token, pos, enc_kv=None):
+        logits, new_caches = forward_decode(
+            cfg, _cast(params, compute_dtype), caches, token, pos, enc_kv=enc_kv
+        )
+        return logits, new_caches
+
+    return decode_step

@@ -1,0 +1,25 @@
+"""Cost-exact scan mode.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, not multiplied by
+the trip count, so any model that scans over layers / KV chunks / SSM
+chunks under-reports FLOPs and bytes.  For roofline measurement the
+dry-run compiles *shallow depth variants* with every ``lax.scan`` fully
+unrolled (this flag), measures them, and extrapolates linearly in depth.
+The production (full-depth) compile keeps rolled scans.
+"""
+
+_EXACT = False
+
+
+def set_cost_exact(value: bool) -> None:
+    global _EXACT
+    _EXACT = bool(value)
+
+
+def cost_exact() -> bool:
+    return _EXACT
+
+
+def scan_unroll(length: int) -> int:
+    """Pass as lax.scan(..., unroll=scan_unroll(length))."""
+    return length if _EXACT else 1

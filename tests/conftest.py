@@ -1,0 +1,20 @@
+"""Pytest config: smoke tests run on the single real CPU device.
+
+Multi-device tests (tests/test_distributed.py, test_context_parallel.py)
+spawn subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=N
+so this process never locks a fake device count (per spec).
+"""
+
+import os
+
+# keep hypothesis deadlines off for jit-compiling properties
+from hypothesis import settings
+
+settings.register_profile("repro", deadline=None, derandomize=True)
+settings.load_profile("repro")
+
+
+def pytest_report_header(config):
+    import jax
+
+    return f"jax devices: {jax.device_count()} ({jax.devices()[0].platform})"

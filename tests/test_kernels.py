@@ -1,0 +1,81 @@
+"""Pallas kernel validation: interpret-mode allclose sweeps vs ref.py oracles."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import merge_pallas, merge_kv_pallas, ops, ref
+
+
+SHAPES = [
+    (1000, 1048, 256),
+    (513, 511, 128),
+    (64, 2000, 256),
+    (2048, 0, 128),
+    (0, 512, 128),
+    (1, 1, 128),
+    (4096, 4096, 512),
+    (127, 3000, 512),
+]
+
+DTYPES = [np.int32, np.float32, np.dtype(jnp.bfloat16)]
+
+
+def _sorted(rng, n, dtype):
+    if np.dtype(dtype) == np.int32:
+        return np.sort(rng.integers(-1000, 1000, n)).astype(np.int32)
+    x = np.sort(rng.standard_normal(n)).astype(np.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("na,nb,tile", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["i32", "f32", "bf16"])
+def test_merge_kernel_vs_oracle(na, nb, tile, dtype):
+    rng = np.random.default_rng(na * 31 + nb)
+    a = jnp.asarray(_sorted(rng, na, dtype))
+    b = jnp.asarray(_sorted(rng, nb, dtype))
+    out = merge_pallas(a, b, tile=tile)
+    exp = ref.merge_ref(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(out.astype(jnp.float32)), np.asarray(exp.astype(jnp.float32))
+    )
+
+
+@pytest.mark.parametrize("na,nb,tile", [(800, 600, 256), (1024, 1024, 128), (3000, 72, 512)])
+def test_merge_kv_kernel_stability(na, nb, tile):
+    rng = np.random.default_rng(7)
+    ak = jnp.asarray(np.sort(rng.integers(0, 20, na)).astype(np.int32))
+    bk = jnp.asarray(np.sort(rng.integers(0, 20, nb)).astype(np.int32))
+    av = jnp.arange(na, dtype=jnp.float32)
+    bv = 10_000 + jnp.arange(nb, dtype=jnp.float32)
+    ko, vo = merge_kv_pallas(ak, av, bk, bv, tile=tile)
+    rk, rv = ref.merge_kv_ref(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(rv))
+
+
+def test_duplicate_heavy_inputs():
+    """All-equal keys: rank arithmetic must not collide or drop."""
+    a = jnp.full((700,), 3, jnp.int32)
+    b = jnp.full((500,), 3, jnp.int32)
+    out = merge_pallas(a, b, tile=128)
+    np.testing.assert_array_equal(np.asarray(out), np.full(1200, 3))
+
+
+def test_ops_sort_and_sort_kv():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(3000).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ops.sort(x, tile=512)), np.sort(np.asarray(x)))
+    k = jnp.asarray(rng.integers(0, 8, 2048).astype(np.int32))
+    v = jnp.arange(2048, dtype=jnp.int32)
+    ks, vs = ops.sort_kv(k, v, tile=512)
+    rks, rvs = ref.sort_kv_ref(k, v)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rks))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(rvs))
+
+
+def test_ops_merge_small_fallback():
+    a = jnp.array([1, 3], jnp.int32)
+    b = jnp.array([2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ops.merge(a, b)), [1, 2, 3])

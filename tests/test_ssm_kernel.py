@@ -1,0 +1,55 @@
+"""Fused SSM-scan Pallas kernel vs oracle: shape/dtype/chunk sweeps."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import (
+    fused_hbm_bytes,
+    ssm_scan_pallas,
+    ssm_scan_ref,
+    xla_scan_hbm_bytes,
+)
+
+
+def _inputs(B, S, D, st, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    dt = jnp.asarray(jax.nn.softplus(rng.standard_normal((B, S, D))).astype(np.float32)).astype(dtype)
+    x = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32)).astype(dtype)
+    bm = jnp.asarray(rng.standard_normal((B, S, st)).astype(np.float32)).astype(dtype)
+    cm = jnp.asarray(rng.standard_normal((B, S, st)).astype(np.float32)).astype(dtype)
+    a = -jnp.exp(jnp.asarray(rng.standard_normal((D, st)).astype(np.float32)))
+    return dt, x, bm, cm, a
+
+
+@pytest.mark.parametrize("B,S,D,st,chunk,d_tile", [
+    (1, 32, 16, 4, 8, 16),
+    (2, 64, 32, 8, 16, 16),
+    (2, 128, 48, 16, 32, 24),
+    (1, 256, 8, 2, 256, 8),  # single chunk, tiny dims
+])
+def test_fused_scan_matches_oracle(B, S, D, st, chunk, d_tile):
+    dt, x, bm, cm, a = _inputs(B, S, D, st, jnp.float32)
+    y, h = ssm_scan_pallas(dt, x, bm, cm, a, chunk=chunk, d_tile=d_tile)
+    yr, hr = ssm_scan_ref(dt, x, bm, cm, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=3e-5, atol=3e-5)
+
+
+def test_fused_scan_bf16_inputs():
+    dt, x, bm, cm, a = _inputs(2, 64, 32, 8, jnp.bfloat16)
+    y, h = ssm_scan_pallas(dt, x, bm, cm, a, chunk=16, d_tile=16)
+    yr, hr = ssm_scan_ref(dt, x, bm, cm, a)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_traffic_model_reduction():
+    """The kernel's analytic HBM traffic is >=50x below the XLA scan path
+    at falcon-mamba train_4k per-device dimensions."""
+    B, S, D, st = 16, 4096, 512, 16
+    fused = fused_hbm_bytes(B, S, D, st)
+    xla = xla_scan_hbm_bytes(B, S, D, st)
+    assert xla / fused > 50, (xla, fused)
