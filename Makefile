@@ -1,0 +1,24 @@
+# CI / local tooling for the Merge Path reproduction.
+# All targets wrap the tier-1 command with PYTHONPATH=src (see ROADMAP.md).
+
+PY ?= python
+
+.PHONY: test bench-smoke bench lint
+
+# tier-1 verify (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# fast benchmark sweep (<60 s): small sizes of every paper benchmark
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/run.py --smoke
+
+# full benchmark sweep (minutes)
+bench:
+	PYTHONPATH=src $(PY) benchmarks/run.py
+
+# no third-party linters are baked into the container, so lint =
+# bytecode-compile everything (catches syntax/indentation/encoding errors)
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	@echo "lint OK"

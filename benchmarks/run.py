@@ -1,9 +1,29 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` shrinks every benchmark's problem size so the full sweep
+finishes in well under 60 s (CI smoke: ``make bench-smoke``).
+``--only substr`` runs just the benchmarks whose name contains substr.
+"""
+import argparse
+import os
 import sys
+import time
+
+# allow `python benchmarks/run.py` from the repo root (or anywhere):
+# the repo root for the `benchmarks` package, `src` for `repro` itself
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true", help="small sizes, finishes in <60s")
+    parser.add_argument("--only", default="", help="run only benchmarks whose name contains this")
+    args = parser.parse_args()
+
     from benchmarks.bench_merge import (
+        bench_batched_merge,
         bench_load_balance,
         bench_merge_throughput,
         bench_moe_dispatch,
@@ -13,16 +33,21 @@ def main() -> None:
     )
 
     rows = []
+    t0 = time.perf_counter()
     for bench in (
         bench_merge_throughput,
+        bench_batched_merge,
         bench_partition_cost,
         bench_load_balance,
         bench_segmented_vs_regular,
         bench_sort,
         bench_moe_dispatch,
     ):
+        if args.only and args.only not in bench.__name__:
+            continue
         print(f"# running {bench.__name__} ...", file=sys.stderr, flush=True)
-        bench(rows)
+        bench(rows, smoke=args.smoke)
+    print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -1,0 +1,403 @@
+"""Batched & k-way Merge Path — the paper's partition, fused over a batch axis.
+
+The paper's Segmented Parallel Merge is explicitly pitched as a building
+block for "sorting and other functions" (§6).  This module generalizes the
+pairwise 1-D primitives of :mod:`repro.core.merge_path` along the two axes
+every real consumer needs:
+
+* **Batched** (leading batch axis): ``merge_batched`` / ``merge_kv_batched``
+  merge ``B`` independent pairs of sorted rows at once.  Instead of vmapping
+  the scalar merge (which re-traces the bisection per lane), all ``B * n``
+  diagonal binary searches run as *one* vectorized Algorithm 2 pass — the
+  vector lanes play the role of the paper's cores across rows *and*
+  diagonals simultaneously.  This is the form the Pallas kernel's 2-D
+  ``(batch, tile)`` grid consumes (``repro.kernels.merge_path``).
+* **k-way**: ``merge_k`` / ``merge_k_kv`` merge ``k`` sorted runs by a
+  tournament of pairwise Merge Paths (``ceil(log2 k)`` batched rounds), the
+  classic multiway generalization of the co-rank partition (cf. Träff,
+  "Simplified, stable parallel merging", PAPERS.md).  ``merge_sort_k`` is
+  the bottom-up sort whose outer rounds instead merge each group of ``k``
+  runs in a *single* multiway co-rank pass, rewriting the data only
+  ``ceil(log_k N)`` times; with ``k = 2`` it is exactly the paper's merge
+  sort.
+
+Conventions match :mod:`repro.core.merge_path`: rows sorted ascending,
+merges stable with A-priority (ties take A first; original order kept
+within each input).  Sentinel padding (``max_sentinel``) is used for
+power-of-two round structure, so payloads must be strictly below the
+dtype's maximum — the same caveat as ``merge_sort``.
+
+Everything is jittable and shardable; no Python-level per-row loops.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .merge_path import max_sentinel
+
+__all__ = [
+    "searchsorted_batched",
+    "diagonal_intersections_batched",
+    "merge_batched",
+    "merge_kv_batched",
+    "merge_sort_batched",
+    "merge_sort_kv_batched",
+    "stable_argsort_batched",
+    "topk_batched",
+    "merge_k",
+    "merge_k_kv",
+    "merge_sort_k",
+]
+
+
+def _bisect_steps(n: int) -> int:
+    """Fixed trip count for a bisection over an interval of length ``n + 1``."""
+    return max(1, int(math.ceil(math.log2(n + 1))) + 1)
+
+
+def searchsorted_batched(sorted_rows: jax.Array, queries: jax.Array, side: str = "left") -> jax.Array:
+    """Row-wise ``searchsorted``: one fused bisection over the whole batch.
+
+    ``sorted_rows`` is ``(B, n)`` with each row ascending; ``queries`` is
+    ``(B, m)``.  Returns ``(B, m)`` int32 insertion points, equal to
+    ``jnp.searchsorted(sorted_rows[i], queries[i], side)`` per row.
+
+    This is the cross-diagonal binary search of Algorithm 2 in its rank
+    reading: with ``side="left"`` the result is ``|{j : row[j] < q}|``,
+    with ``side="right"`` it is ``|{j : row[j] <= q}|`` — the two tie
+    orientations that make the pairwise merge stable with A-priority.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    b, n = sorted_rows.shape
+    if n == 0:
+        return jnp.zeros(queries.shape, jnp.int32)
+    lo = jnp.zeros(queries.shape, jnp.int32)
+    hi = jnp.full(queries.shape, n, jnp.int32)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        sv = jnp.take_along_axis(sorted_rows, jnp.clip(mid, 0, n - 1), axis=1)
+        go_right = (sv < queries) if side == "left" else (sv <= queries)
+        active = lo < hi
+        lo2 = jnp.where(active & go_right, mid + 1, lo)
+        hi2 = jnp.where(active & ~go_right, mid, hi)
+        return lo2, hi2
+
+    lo, hi = jax.lax.fori_loop(0, _bisect_steps(n), body, (lo, hi))
+    return lo
+
+
+def diagonal_intersections_batched(a: jax.Array, b: jax.Array, diags: jax.Array) -> jax.Array:
+    """Algorithm 2, vectorized over rows *and* diagonals at once.
+
+    ``a`` is ``(B, na)``, ``b`` is ``(B, nb)``, ``diags`` is ``(D,)`` or
+    ``(B, D)`` with ints in ``[0, na + nb]``.  Returns ``ai`` of shape
+    ``(B, D)``: for batch row ``r`` and diagonal ``d``, the first ``d``
+    outputs of the stable merge of ``a[r]`` and ``b[r]`` are
+    ``a[r, :ai]`` and ``b[r, :d - ai]``.
+
+    Equivalent to ``vmap(diagonal_intersections)`` but with a single
+    fused bisection — one trip count, one gather per step, every
+    ``(row, diagonal)`` pair in its own vector lane.
+    """
+    bsz, na = a.shape
+    nb = b.shape[1]
+    diags = jnp.asarray(diags, jnp.int32)
+    if diags.ndim == 1:
+        diags = jnp.broadcast_to(diags[None, :], (bsz, diags.shape[0]))
+    if nb == 0:  # path is a straight vertical line
+        return jnp.minimum(diags, na)
+    if na == 0:  # straight horizontal line
+        return jnp.zeros_like(diags)
+    lo = jnp.maximum(0, diags - nb)
+    hi = jnp.minimum(diags, na)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        av = jnp.take_along_axis(a, jnp.clip(mid, 0, na - 1), axis=1)
+        bv = jnp.take_along_axis(b, jnp.clip(diags - 1 - mid, 0, nb - 1), axis=1)
+        pred = av <= bv  # A-priority: A[i] precedes B[j] iff A[i] <= B[j]
+        active = lo < hi
+        lo2 = jnp.where(active & pred, mid + 1, lo)
+        hi2 = jnp.where(active & ~pred, mid, hi)
+        return lo2, hi2
+
+    lo, hi = jax.lax.fori_loop(0, _bisect_steps(min(na, nb)), body, (lo, hi))
+    return lo
+
+
+def _batched_ranks(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cross-ranks of every element of every row pair, in one fused pass."""
+    na, nb = a.shape[1], b.shape[1]
+    ia = jnp.arange(na, dtype=jnp.int32)[None, :] + searchsorted_batched(b, a, side="left")
+    ib = jnp.arange(nb, dtype=jnp.int32)[None, :] + searchsorted_batched(a, b, side="right")
+    return ia, ib
+
+
+def merge_batched(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Stable merge of ``B`` pairs of sorted rows: ``(B, na) + (B, nb) -> (B, na + nb)``.
+
+    Row ``r`` of the result is exactly ``merge(a[r], b[r])`` (stable,
+    A-priority) — bit-identical to the vmapped pairwise merge, but computed
+    by a single vectorized Algorithm 2 pass: every element's output
+    position is its cross-rank, and all ``B * (na + nb)`` rank searches
+    share one fixed-trip bisection.
+    """
+    bsz, na = a.shape
+    nb = b.shape[1]
+    dtype = jnp.result_type(a, b)
+    ia, ib = _batched_ranks(a, b)
+    rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    out = jnp.zeros((bsz, na + nb), dtype)
+    out = out.at[rows, ia].set(a.astype(dtype))
+    out = out.at[rows, ib].set(b.astype(dtype))
+    return out
+
+
+def merge_kv_batched(
+    ak: jax.Array, av: jax.Array, bk: jax.Array, bv: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable batched key-value merge; row ``r`` equals ``merge_kv`` of row ``r``.
+
+    ``ak``/``bk`` are ``(B, na)``/``(B, nb)`` sorted key rows; ``av``/``bv``
+    the same-shape value rows carried along the permutation.
+    """
+    bsz, na = ak.shape
+    nb = bk.shape[1]
+    kd = jnp.result_type(ak, bk)
+    vd = jnp.result_type(av, bv)
+    ia, ib = _batched_ranks(ak, bk)
+    rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    keys = jnp.zeros((bsz, na + nb), kd).at[rows, ia].set(ak.astype(kd)).at[rows, ib].set(bk.astype(kd))
+    vals = jnp.zeros((bsz, na + nb), vd).at[rows, ia].set(av.astype(vd)).at[rows, ib].set(bv.astype(vd))
+    return keys, vals
+
+
+def _pad_rows_pow2(x: jax.Array, fill) -> jax.Array:
+    """Pad the last axis of ``(B, n)`` to the next power of two with ``fill``."""
+    n = x.shape[1]
+    m = 1 << max(0, (n - 1).bit_length())
+    if m == n:
+        return x
+    pad = jnp.full((x.shape[0], m - n), fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=1)
+
+
+def merge_sort_batched(x: jax.Array) -> jax.Array:
+    """Sort every row of ``(B, n)`` ascending via batched merge-path rounds.
+
+    The classic bottom-up structure of the paper's merge sort, but each of
+    the ``log2 n`` rounds merges *all* runs of *all* rows in one
+    :func:`merge_batched` call — batch and pair axes are flattened
+    together, so the vector utilization is independent of where we are in
+    the round schedule.
+    """
+    bsz, n = x.shape
+    if n <= 1:
+        return x
+    xp = _pad_rows_pow2(x, max_sentinel(x.dtype))
+    m = xp.shape[1]
+    width = 1
+    while width < m:
+        runs = xp.reshape(-1, 2, width)  # (B * m/2w, 2, w)
+        xp = merge_batched(runs[:, 0], runs[:, 1]).reshape(bsz, m)
+        width *= 2
+    return xp[:, :n]
+
+
+def merge_sort_kv_batched(keys: jax.Array, values: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise stable key-value sort of ``(B, n)`` keys (ascending).
+
+    Stability is inherited from the A-priority pairwise merge, making this
+    the batched form of the dispatch sort MoE relies on for deterministic
+    capacity drops.
+    """
+    bsz, n = keys.shape
+    if n <= 1:
+        return keys, values
+    kp = _pad_rows_pow2(keys, max_sentinel(keys.dtype))
+    vp = _pad_rows_pow2(values, jnp.zeros((), values.dtype))
+    m = kp.shape[1]
+    width = 1
+    while width < m:
+        kr = kp.reshape(-1, 2, width)
+        vr = vp.reshape(-1, 2, width)
+        kp, vp = merge_kv_batched(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
+        kp = kp.reshape(bsz, m)
+        vp = vp.reshape(bsz, m)
+        width *= 2
+    return kp[:, :n], vp[:, :n]
+
+
+def stable_argsort_batched(keys: jax.Array) -> jax.Array:
+    """Row-wise stable argsort (ascending) of ``(B, n)`` keys."""
+    bsz, n = keys.shape
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+    _, perm = merge_sort_kv_batched(keys, idx)
+    return perm
+
+
+def topk_batched(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise descending top-k of ``(B, n)``: ``(values, indices)``, each ``(B, k)``.
+
+    Stable like :func:`repro.core.merge_path.topk_desc` (among equal values
+    the smallest index wins, matching ``jax.lax.top_k``), but all rows ride
+    one batched kv-sort instead of a vmapped per-row sort.
+    """
+    perm = stable_argsort_batched(-x)
+    top_idx = perm[:, :k]
+    return jnp.take_along_axis(x, top_idx, axis=1), top_idx
+
+
+# ---------------------------------------------------------------------------
+# k-way tournament merges
+# ---------------------------------------------------------------------------
+
+def _stack_runs(runs):
+    """Normalize a ``(k, n)`` array or a sequence of sorted 1-D runs.
+
+    Ragged runs are sentinel-padded to the longest; the total true length
+    is returned so callers can trim the sentinels off the merged tail.
+    """
+    if isinstance(runs, jax.Array) or hasattr(runs, "shape"):
+        runs = jnp.asarray(runs)
+        if runs.ndim != 2:
+            raise ValueError(f"expected (k, n) runs, got shape {runs.shape}")
+        return runs, runs.shape[0] * runs.shape[1]
+    runs = [jnp.asarray(r) for r in runs]
+    if not runs:
+        raise ValueError("merge_k needs at least one run")
+    dtype = jnp.result_type(*runs)
+    total = sum(r.shape[0] for r in runs)
+    width = max(r.shape[0] for r in runs)
+    sent = max_sentinel(dtype)
+    padded = [
+        jnp.concatenate([r.astype(dtype), jnp.full((width - r.shape[0],), sent, dtype)])
+        for r in runs
+    ]
+    return jnp.stack(padded), total
+
+
+def merge_k(runs) -> jax.Array:
+    """Merge ``k`` sorted runs into one sorted array via a pairwise tournament.
+
+    ``runs`` is a ``(k, n)`` array of sorted rows, or a sequence of sorted
+    1-D arrays (possibly ragged — shorter runs are sentinel-padded).  The
+    tournament runs ``ceil(log2 k)`` rounds; round ``j`` merges ``k / 2^j``
+    run pairs with one :func:`merge_batched` call, i.e. the co-rank
+    partition applied multiway exactly as in the stable multiway merges of
+    Träff et al. (PAPERS.md).  ``k = 1`` is the identity.
+
+    Stable across runs in input order: ties resolve toward the
+    lower-indexed run (tournament rounds always merge lower-index runs as
+    the A side).  Output length is the total number of true elements;
+    sentinel padding is trimmed, which requires payloads strictly below
+    ``max_sentinel(dtype)`` (the module-level caveat).
+    """
+    stacked, total = _stack_runs(runs)
+    k = stacked.shape[0]
+    target = 1 << max(0, (k - 1).bit_length())
+    if target != k:
+        pad = jnp.full((target - k, stacked.shape[1]), max_sentinel(stacked.dtype), stacked.dtype)
+        stacked = jnp.concatenate([stacked, pad], axis=0)
+    while stacked.shape[0] > 1:
+        stacked = merge_batched(stacked[0::2], stacked[1::2])
+    return stacked[0][:total]
+
+
+def merge_k_kv(key_runs, value_runs) -> Tuple[jax.Array, jax.Array]:
+    """Key-value :func:`merge_k`: merge ``k`` sorted (keys, values) runs.
+
+    ``key_runs`` / ``value_runs`` are matching ``(k, n)`` arrays or
+    sequences of matching 1-D runs.  Stable with lower-run priority, like
+    :func:`merge_k`; padded value slots carry zeros and are trimmed with
+    their sentinel keys.
+    """
+    kstack, total = _stack_runs(key_runs)
+    if isinstance(value_runs, jax.Array) or hasattr(value_runs, "shape"):
+        vstack = jnp.asarray(value_runs)
+    else:
+        value_runs = [jnp.asarray(v) for v in value_runs]
+        vd = jnp.result_type(*value_runs)
+        width = kstack.shape[1]
+        vstack = jnp.stack(
+            [
+                jnp.concatenate([v.astype(vd), jnp.zeros((width - v.shape[0],), vd)])
+                for v in value_runs
+            ]
+        )
+    if vstack.shape != kstack.shape:
+        raise ValueError(f"key runs {kstack.shape} and value runs {vstack.shape} differ")
+    k = kstack.shape[0]
+    target = 1 << max(0, (k - 1).bit_length())
+    if target != k:
+        kpad = jnp.full((target - k, kstack.shape[1]), max_sentinel(kstack.dtype), kstack.dtype)
+        vpad = jnp.zeros((target - k, vstack.shape[1]), vstack.dtype)
+        kstack = jnp.concatenate([kstack, kpad], axis=0)
+        vstack = jnp.concatenate([vstack, vpad], axis=0)
+    while kstack.shape[0] > 1:
+        kstack, vstack = merge_kv_batched(kstack[0::2], vstack[0::2], kstack[1::2], vstack[1::2])
+    return kstack[0][:total], vstack[0][:total]
+
+
+def _merge_k_groups(runs: jax.Array) -> jax.Array:
+    """Merge every group of ``k`` sorted runs in ONE co-rank pass.
+
+    ``runs`` is ``(G, k, w)``: G independent groups of k sorted width-w
+    runs.  For run ``j``, an element's output position inside its group is
+    its own index plus, for every other run ``j'``, the count of that
+    run's elements preceding it — ``side="right"`` for ``j' < j`` (their
+    ties come first) and ``side="left"`` for ``j' > j`` (our ties come
+    first).  That is the stable multiway co-rank partition (Siebert &
+    Träff, PAPERS.md): ``k*(k-1)`` fused rank searches but a single
+    scatter pass over the data.  Returns ``(G, k*w)``.
+    """
+    g, k, w = runs.shape
+    dtype = runs.dtype
+    out = jnp.zeros((g, k * w), dtype)
+    grp = jnp.arange(g, dtype=jnp.int32)[:, None]
+    for j in range(k):
+        q = runs[:, j]  # (G, w)
+        rank = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None, :], (g, w))
+        for jp in range(k):
+            if jp == j:
+                continue
+            side = "right" if jp < j else "left"
+            rank = rank + searchsorted_batched(runs[:, jp], q, side=side)
+        out = out.at[grp, rank].set(q)
+    return out
+
+
+def merge_sort_k(x: jax.Array, k: int = 4) -> jax.Array:
+    """Bottom-up merge sort with fan-in ``k`` multiway rounds.
+
+    ``k`` must be a power of two.  Each outer round merges every group of
+    ``k`` consecutive sorted runs in a single co-rank pass
+    (:func:`_merge_k_groups`), so the data is rewritten only
+    ``ceil(log_k N)`` times instead of ``log2 N`` — the paper's merge sort
+    generalized multiway, trading ``k - 1`` rank searches per element per
+    round for fewer passes.  With ``k = 2`` this is exactly the paper's
+    pairwise merge sort.
+    """
+    if k < 1 or (k & (k - 1)) != 0:
+        raise ValueError(f"fan-in k must be a power of two, got {k}")
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    xp = _pad_rows_pow2(x[None, :], max_sentinel(x.dtype))[0]
+    m = xp.shape[0]
+    fan_max = max(k, 2)  # k=1 degenerates to the pairwise sort
+    width = 1
+    while width < m:
+        fan = min(fan_max, m // width)  # last round may have fewer runs than k
+        xp = _merge_k_groups(xp.reshape(-1, fan, width)).reshape(-1)
+        width *= fan
+    return xp[:n]

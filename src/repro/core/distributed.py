@@ -28,7 +28,36 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export, replication check renamed to check_vma
+    from jax import shard_map as _shard_map_impl
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-portable ``shard_map``: accepts either replication-check
+    kwarg name and translates to the installed jax's spelling.  Defaults
+    the check off (this repo's bodies use untyped collectives), but an
+    explicit ``check_vma=True`` / ``check_rep=True`` is honored."""
+    check = kwargs.pop("check_vma", None)
+    if check is None:
+        check = kwargs.pop("check_rep", None)
+    else:
+        kwargs.pop("check_rep", None)
+    kwargs[_CHECK_KW] = False if check is None else check
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def _axis_size(axis_name: str) -> int:
+    """``jax.lax.axis_size`` compat (added after 0.4.x)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
 
 from .merge_path import (
     diagonal_intersections,
@@ -52,7 +81,7 @@ def distributed_merge_local(a_shard: jax.Array, b_shard: jax.Array, axis_name: s
     disjoint by Lemma 3 — the returned shard *is* this device's slice of S.
     """
     idx = jax.lax.axis_index(axis_name)
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     a = jax.lax.all_gather(a_shard, axis_name, tiled=True)
     b = jax.lax.all_gather(b_shard, axis_name, tiled=True)
     n = a.shape[0] + b.shape[0]
@@ -119,7 +148,7 @@ def distributed_sort_local(
     anywhere — callers either assert it is false or retry with a larger
     capacity factor).
     """
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     m = x_shard.shape[0]
     cap = int(capacity_factor * m)
     # round capacity up so it is lane-aligned
@@ -189,7 +218,7 @@ def distributed_topk_local(
     runs (P*k elements — tiny), then a merge-path tree combine.  Indices
     are global.  Result is replicated across the axis.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = _axis_size(axis_name)
     m = x_shard.shape[0]
     idx0 = jax.lax.axis_index(axis_name) * m
     lv, li = topk_desc(x_shard, k)

@@ -43,10 +43,16 @@ __all__ = [
 
 
 def max_sentinel(dtype) -> jnp.ndarray:
-    """Largest representable value for ``dtype`` (used to pad sorted runs)."""
+    """Largest value for ``dtype``, used to pad sorted runs.
+
+    Floats use ``+inf`` (not ``finfo.max``) so that real ``+inf`` payloads
+    — e.g. the negated keys of ``-inf`` logits in top-k — tie with the
+    padding instead of sorting after it; stability then keeps every real
+    element ahead of the pads, which are always appended last.
+    """
     dtype = jnp.dtype(dtype)
     if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.finfo(dtype).max, dtype)
+        return jnp.array(jnp.inf, dtype)
     return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
@@ -185,42 +191,34 @@ def merge_sort(x: jax.Array) -> jax.Array:
     """Bottom-up merge sort built from pairwise merge-path merges.
 
     ``log2 N`` rounds; round ``r`` merges ``N / 2^(r+1)`` disjoint pairs of
-    sorted runs of length ``2^r`` with a vmapped :func:`merge` — exactly the
-    paper's merge-sort structure (§1, §3), with the early rounds trivially
-    parallel over pairs and the late rounds parallel *within* each merge.
+    sorted runs of length ``2^r`` — exactly the paper's merge-sort
+    structure (§1, §3), with the early rounds trivially parallel over pairs
+    and the late rounds parallel *within* each merge.  Each round is one
+    fused :func:`repro.core.batched.merge_batched` pass (pairs stacked on
+    the batch axis), so every round saturates the vector lanes regardless
+    of run width.  This is the singleton-batch case of
+    :func:`repro.core.batched.merge_sort_batched`.
     """
-    n = x.shape[0]
-    if n <= 1:
+    from .batched import merge_sort_batched  # local import: batched builds on this module
+
+    if x.shape[0] <= 1:
         return x
-    xp = _pad_pow2(x, max_sentinel(x.dtype))
-    m = xp.shape[0]
-    vm = jax.vmap(merge)
-    width = 1
-    while width < m:
-        runs = xp.reshape(-1, 2, width)
-        xp = vm(runs[:, 0], runs[:, 1]).reshape(-1)
-        width *= 2
-    return xp[:n]
+    return merge_sort_batched(x[None, :])[0]
 
 
 def merge_sort_kv(keys: jax.Array, values: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Stable bottom-up key-value merge sort (keys ascending)."""
-    n = keys.shape[0]
-    if n <= 1:
+    """Stable bottom-up key-value merge sort (keys ascending).
+
+    Rounds are fused :func:`repro.core.batched.merge_kv_batched` passes —
+    the singleton-batch case of
+    :func:`repro.core.batched.merge_sort_kv_batched`.
+    """
+    from .batched import merge_sort_kv_batched  # local import: batched builds on this module
+
+    if keys.shape[0] <= 1:
         return keys, values
-    kp = _pad_pow2(keys, max_sentinel(keys.dtype))
-    vp = _pad_pow2(values, jnp.zeros((), values.dtype))
-    m = kp.shape[0]
-    vm = jax.vmap(merge_kv)
-    width = 1
-    while width < m:
-        kr = kp.reshape(-1, 2, width)
-        vr = vp.reshape(-1, 2, width)
-        kp, vp = vm(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
-        kp = kp.reshape(-1)
-        vp = vp.reshape(-1)
-        width *= 2
-    return kp[:n], vp[:n]
+    ks, vs = merge_sort_kv_batched(keys[None, :], values[None, :])
+    return ks[0], vs[0]
 
 
 def stable_argsort(keys: jax.Array) -> jax.Array:

@@ -1,6 +1,20 @@
 """Pallas TPU kernels for the Merge Path hot spots (+ jnp oracles)."""
 
 from . import ops, ref
-from .merge_path import merge_pallas, merge_kv_pallas, DEFAULT_TILE
+from .merge_path import (
+    DEFAULT_TILE,
+    merge_batched_pallas,
+    merge_kv_batched_pallas,
+    merge_kv_pallas,
+    merge_pallas,
+)
 
-__all__ = ["ops", "ref", "merge_pallas", "merge_kv_pallas", "DEFAULT_TILE"]
+__all__ = [
+    "ops",
+    "ref",
+    "merge_pallas",
+    "merge_kv_pallas",
+    "merge_batched_pallas",
+    "merge_kv_batched_pallas",
+    "DEFAULT_TILE",
+]

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.batched import diagonal_intersections_batched
 from repro.core.merge_path import diagonal_intersections, max_sentinel
 
 DEFAULT_TILE = 512
@@ -170,6 +171,11 @@ def merge_kv_pallas(
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
     """Stable key-value merge with the Pallas SPM kernel."""
+    if av.shape != ak.shape or bv.shape != bk.shape:
+        raise ValueError(
+            f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
+            f"values {av.shape}/{bv.shape}"
+        )
     akp, bkp, a_starts, b_starts, n, nt, kd = _prepare(ak, bk, tile)
     vd = jnp.result_type(av, bv)
     avp = jnp.concatenate([av.astype(vd), jnp.zeros((tile,), vd)])
@@ -193,3 +199,162 @@ def merge_kv_pallas(
         interpret=interpret,
     )(a_starts, b_starts, akp, avp, bkp, bvp)
     return ko[:n], vo[:n]
+
+
+# ---------------------------------------------------------------------------
+# Batched merges: 2-D (batch, tile) grid
+# ---------------------------------------------------------------------------
+#
+# The batched form runs B independent merges in ONE kernel launch.  The
+# partition phase is a single fused Algorithm 2 pass over every (row,
+# diagonal) pair (``diagonal_intersections_batched``), and its (B, nt)
+# start tables ride into the kernel as scalar-prefetch operands.  Each
+# (batch, tile) grid step reads its two starts from SMEM, slices its
+# input windows from the row it owns, and writes exactly one (1, tile)
+# output block — Corollary 7's equal output partition, now per row.
+#
+# Versus vmapping the 1-D kernel, this keeps ONE grid whose trailing
+# (tile) axis is innermost, so consecutive grid steps walk consecutive
+# output blocks of the same row (sequential HBM writes), and the
+# partition bisection is shared across the whole batch instead of being
+# re-run per lane.
+
+
+def _merge_batched_kernel(
+    a_starts,  # scalar prefetch (SMEM): (B, nt) per-(batch, tile) A starts
+    b_starts,  # scalar prefetch (SMEM): (B, nt) per-(batch, tile) B starts
+    a_ref,  # (B, na + T) sentinel-padded rows, memory_space=ANY
+    b_ref,
+    o_ref,  # (1, T) VMEM output block
+    *,
+    tile: int,
+):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    a0 = a_starts[bi, ti]
+    b0 = b_starts[bi, ti]
+    wa = a_ref[bi, pl.ds(a0, tile)]
+    wb = b_ref[bi, pl.ds(b0, tile)]
+    ra, rb = _tile_ranks(wa, wb)
+    o_ref[...] = (_permute_select(ra, wa, tile) + _permute_select(rb, wb, tile))[None, :]
+
+
+def _merge_kv_batched_kernel(
+    a_starts,
+    b_starts,
+    ak_ref,
+    av_ref,
+    bk_ref,
+    bv_ref,
+    ko_ref,
+    vo_ref,
+    *,
+    tile: int,
+):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    a0 = a_starts[bi, ti]
+    b0 = b_starts[bi, ti]
+    wak = ak_ref[bi, pl.ds(a0, tile)]
+    wbk = bk_ref[bi, pl.ds(b0, tile)]
+    wav = av_ref[bi, pl.ds(a0, tile)]
+    wbv = bv_ref[bi, pl.ds(b0, tile)]
+    ra, rb = _tile_ranks(wak, wbk)
+    ko_ref[...] = (_permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile))[None, :]
+    vo_ref[...] = (_permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile))[None, :]
+
+
+def _prepare_batched(a, b, tile):
+    """Host-side partition phase for the batched kernel: one fused Alg. 2
+    pass over all (row, diagonal) pairs."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"expected (B, na) and (B, nb) with equal B, got {a.shape} and {b.shape}")
+    dtype = jnp.result_type(a, b)
+    a = a.astype(dtype)
+    b = b.astype(dtype)
+    bsz = a.shape[0]
+    n = a.shape[1] + b.shape[1]
+    nt = pl.cdiv(n, tile)
+    diags = jnp.minimum(jnp.arange(nt, dtype=jnp.int32) * tile, n)
+    a_starts = diagonal_intersections_batched(a, b, diags).astype(jnp.int32)  # (B, nt)
+    b_starts = diags[None, :] - a_starts
+    sent = max_sentinel(dtype)
+    ap = jnp.concatenate([a, jnp.full((bsz, tile), sent, dtype)], axis=1)
+    bp = jnp.concatenate([b, jnp.full((bsz, tile), sent, dtype)], axis=1)
+    return ap, bp, a_starts, b_starts, bsz, n, nt, dtype
+
+
+def merge_batched_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Merge ``B`` pairs of sorted rows in one 2-D-grid SPM kernel launch.
+
+    ``a`` is ``(B, na)``, ``b`` is ``(B, nb)``, both row-sorted; returns
+    ``(B, na + nb)`` where row ``r`` is the stable A-priority merge of
+    ``a[r]`` and ``b[r]`` — bit-identical to ``vmap(merge)``.
+    """
+    ap, bp, a_starts, b_starts, bsz, n, nt, dtype = _prepare_batched(a, b, tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, nt),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_merge_batched_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nt * tile), dtype),
+        interpret=interpret,
+    )(a_starts, b_starts, ap, bp)
+    return out[:, :n]
+
+
+def merge_kv_batched_pallas(
+    ak: jax.Array,
+    av: jax.Array,
+    bk: jax.Array,
+    bv: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched stable key-value merge on the 2-D-grid SPM kernel.
+
+    Keys ``(B, na)``/``(B, nb)`` row-sorted; values carried along the same
+    permutation.  Row ``r`` equals ``merge_kv`` of row ``r``.
+    """
+    if av.shape != ak.shape or bv.shape != bk.shape:
+        raise ValueError(
+            f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
+            f"values {av.shape}/{bv.shape}"
+        )
+    akp, bkp, a_starts, b_starts, bsz, n, nt, kd = _prepare_batched(ak, bk, tile)
+    vd = jnp.result_type(av, bv)
+    avp = jnp.concatenate([av.astype(vd), jnp.zeros((bsz, tile), vd)], axis=1)
+    bvp = jnp.concatenate([bv.astype(vd), jnp.zeros((bsz, tile), vd)], axis=1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, nt),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+            pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+        ],
+    )
+    ko, vo = pl.pallas_call(
+        functools.partial(_merge_kv_batched_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nt * tile), kd),
+            jax.ShapeDtypeStruct((bsz, nt * tile), vd),
+        ],
+        interpret=interpret,
+    )(a_starts, b_starts, akp, avp, bkp, bvp)
+    return ko[:, :n], vo[:, :n]

@@ -2,8 +2,12 @@
 
 ``merge`` / ``merge_kv`` / ``sort`` / ``sort_kv`` dispatch to the Pallas
 SPM kernel when the problem is big enough to tile, and to the pure-JAX
-core otherwise.  ``interpret`` defaults to True because this build
-environment is CPU-only; on a real TPU pass ``interpret=False``.
+core otherwise.  ``merge_batched`` / ``merge_kv_batched`` are the batched
+(leading batch axis) forms on the 2-D ``(batch, tile)`` grid kernel —
+one launch for the whole batch; the sorts route their wide rounds
+through them so a sort round is a single kernel launch regardless of how
+many run pairs it merges.  ``interpret`` defaults to True because this
+build environment is CPU-only; on a real TPU pass ``interpret=False``.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import batched as _bat
 from repro.core import merge_path as _mp
 from . import merge_path as _kern
 
@@ -45,8 +50,43 @@ def merge_kv(
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_batched(
+    a: jax.Array, b: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True
+) -> jax.Array:
+    """Stable merge of ``B`` row pairs: ``(B, na) + (B, nb) -> (B, na+nb)``.
+
+    One 2-D-grid kernel launch for the whole batch when rows are wide
+    enough to tile; the fused pure-JAX batched merge otherwise.
+    """
+    if a.shape[1] + b.shape[1] <= tile:
+        return _bat.merge_batched(a, b)
+    return _kern.merge_batched_pallas(a, b, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_kv_batched(
+    ak: jax.Array,
+    av: jax.Array,
+    bk: jax.Array,
+    bv: jax.Array,
+    *,
+    tile: int = _kern.DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable batched key-value merge (2-D-grid Pallas kernel when wide)."""
+    if ak.shape[1] + bk.shape[1] <= tile:
+        return _bat.merge_kv_batched(ak, av, bk, bv)
+    return _kern.merge_kv_batched_pallas(ak, av, bk, bv, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def sort(x: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True) -> jax.Array:
-    """Bottom-up merge sort whose top rounds use the Pallas merge kernel."""
+    """Bottom-up merge sort whose wide rounds run on the batched Pallas kernel.
+
+    Every round is ONE call: narrow rounds (2*width <= tile) use the fused
+    pure-JAX batched merge, wide rounds the 2-D ``(pairs, tile)`` grid
+    kernel — no Python-level loop over run pairs.
+    """
     n = x.shape[0]
     if n <= 1:
         return x
@@ -56,13 +96,11 @@ def sort(x: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True
     while width < m:
         runs = xp.reshape(-1, 2, width)
         if 2 * width <= tile:
-            xp = jax.vmap(_mp.merge)(runs[:, 0], runs[:, 1]).reshape(-1)
+            xp = _bat.merge_batched(runs[:, 0], runs[:, 1]).reshape(-1)
         else:
-            pairs = [
-                _kern.merge_pallas(runs[i, 0], runs[i, 1], tile=tile, interpret=interpret)
-                for i in range(runs.shape[0])
-            ]
-            xp = jnp.concatenate(pairs)
+            xp = _kern.merge_batched_pallas(
+                runs[:, 0], runs[:, 1], tile=tile, interpret=interpret
+            ).reshape(-1)
         width *= 2
     return xp[:n]
 
@@ -75,7 +113,7 @@ def sort_kv(
     tile: int = _kern.DEFAULT_TILE,
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Stable key-value merge sort; top rounds on the Pallas kernel."""
+    """Stable key-value merge sort; wide rounds on the batched Pallas kernel."""
     n = keys.shape[0]
     if n <= 1:
         return keys, values
@@ -87,16 +125,11 @@ def sort_kv(
         kr = kp.reshape(-1, 2, width)
         vr = vp.reshape(-1, 2, width)
         if 2 * width <= tile:
-            kp, vp = jax.vmap(_mp.merge_kv)(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
-            kp, vp = kp.reshape(-1), vp.reshape(-1)
+            kp, vp = _bat.merge_kv_batched(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
         else:
-            ks, vs = [], []
-            for i in range(kr.shape[0]):
-                ko, vo = _kern.merge_kv_pallas(
-                    kr[i, 0], vr[i, 0], kr[i, 1], vr[i, 1], tile=tile, interpret=interpret
-                )
-                ks.append(ko)
-                vs.append(vo)
-            kp, vp = jnp.concatenate(ks), jnp.concatenate(vs)
+            kp, vp = _kern.merge_kv_batched_pallas(
+                kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1], tile=tile, interpret=interpret
+            )
+        kp, vp = kp.reshape(-1), vp.reshape(-1)
         width *= 2
     return kp[:n], vp[:n]

@@ -25,13 +25,13 @@ position computation as the ablation baseline (benchmarks table 2).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import merge_sort_kv
+from repro.core import merge_sort_kv_batched, searchsorted_batched
 from repro.parallel.sharding import constrain
 from .layers import dense_init, mlp_apply, mlp_init, _act
 
@@ -55,22 +55,34 @@ def capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
     return max(8, -(-c // 8) * 8)  # pad to lane-friendly multiple
 
 
-def _positions_merge_path(flat_expert: jax.Array, e: int) -> Tuple[jax.Array, jax.Array]:
-    """Merge-path dispatch: (position_in_expert, is_kept_order_rank) per slot.
+def _positions_merge_path_batched(flat_expert: jax.Array, e: int) -> jax.Array:
+    """Merge-path dispatch for the whole batch: position-in-expert per slot.
 
-    flat_expert: (N,) int32 expert ids (N = tokens*k).
-    Returns position_in_expert (N,) aligned with the input slots.
+    flat_expert: (B, N) int32 expert ids (N = tokens*k per row).  Returns
+    (B, N) position_in_expert aligned with the input slots.
+
+    One batched stable kv-sort (``repro.core.batched``) groups every row's
+    assignments by expert simultaneously — all rows, runs and diagonal
+    searches share a single fused Algorithm 2 pass instead of a vmapped
+    per-row sort.  Expert start offsets fall out of a batched binary
+    search over the sorted ids (the same cross-diagonal search).
     """
-    n = flat_expert.shape[0]
-    slots = jnp.arange(n, dtype=jnp.int32)
-    sorted_e, sorted_slot = merge_sort_kv(flat_expert, slots)  # stable
-    # expert start offsets within the sorted list: binary search (Alg. 2
-    # against the "array" of expert ids — the same cross-diagonal search)
-    offsets = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=flat_expert.dtype), side="left")
-    pos_sorted = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_e].astype(jnp.int32)
+    b, n = flat_expert.shape
+    slots = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    sorted_e, sorted_slot = merge_sort_kv_batched(flat_expert, slots)  # stable
+    experts = jnp.broadcast_to(jnp.arange(e, dtype=flat_expert.dtype)[None, :], (b, e))
+    offsets = searchsorted_batched(sorted_e, experts, side="left")  # (B, E)
+    pos_sorted = jnp.arange(n, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        offsets, sorted_e.astype(jnp.int32), axis=1
+    )
     # scatter positions back to original slot order
-    pos = jnp.zeros((n,), jnp.int32).at[sorted_slot].set(pos_sorted)
-    return pos
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return jnp.zeros((b, n), jnp.int32).at[rows, sorted_slot].set(pos_sorted)
+
+
+def _positions_merge_path(flat_expert: jax.Array, e: int) -> jax.Array:
+    """Single-row form of :func:`_positions_merge_path_batched` (tests/ablation)."""
+    return _positions_merge_path_batched(flat_expert[None, :], e)[0]
 
 
 def _positions_cumsum(flat_expert: jax.Array, e: int) -> jax.Array:
@@ -90,23 +102,27 @@ def moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     top_p, top_e = jax.lax.top_k(probs, k)  # (B,S,k)
     top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
 
-    def dispatch_row(xrow, erow, prow):
-        # xrow (S,d), erow (S,k), prow (S,k)
-        flat_e = erow.reshape(-1).astype(jnp.int32)  # (S*k,)
-        if cfg.moe_dispatch == "merge_path":
-            pos = _positions_merge_path(flat_e, e)
-        else:
-            pos = _positions_cumsum(flat_e, e)
-        kept = pos < cap
-        tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    # Position-in-expert for ALL batch rows at once: the merge-path path is
+    # one batched stable kv-sort (a single fused Alg. 2 pass across the
+    # whole batch) rather than a vmapped per-row sort.
+    flat_e = top_e.reshape(b, s * k).astype(jnp.int32)  # (B, S*k)
+    if cfg.moe_dispatch == "merge_path":
+        pos = _positions_merge_path_batched(flat_e, e)  # (B, S*k)
+    else:
+        pos = jax.vmap(lambda fe: _positions_cumsum(fe, e))(flat_e)
+    kept = pos < cap
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, s * k)
+    )
+
+    def dispatch_row(xrow, flat_e_r, pos_r, kept_r, tok_r):
         # scatter embeddings into (E, cap, d); dropped slots go nowhere
         buf = jnp.zeros((e, cap, d), xrow.dtype)
-        buf = buf.at[flat_e, jnp.where(kept, pos, cap)].set(
-            xrow[tok], mode="drop"
+        return buf.at[flat_e_r, jnp.where(kept_r, pos_r, cap)].set(
+            xrow[tok_r], mode="drop"
         )
-        return buf, (flat_e, pos, kept, tok)
 
-    buf, (flat_e, pos, kept, tok) = jax.vmap(dispatch_row)(x, top_e, top_p)
+    buf = jax.vmap(dispatch_row)(x, flat_e, pos, kept, tok)
     buf = constrain(buf, "act_batch", "act_experts", None, None)
     # batched expert MLP: (B,E,C,d) x (E,d,f) -> (B,E,C,f)
     up = jnp.einsum("becd,edf->becf", buf, params["wi"])

@@ -24,6 +24,19 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def _canon_entry(mesh_axes):
+    """Canonical PartitionSpec entry: () -> None, ("x",) -> "x".
+
+    Newer jax normalizes singleton tuples inside PartitionSpec itself;
+    0.4.x keeps them verbatim, so normalize here for version-stable specs.
+    """
+    if not mesh_axes:
+        return None
+    if isinstance(mesh_axes, tuple) and len(mesh_axes) == 1:
+        return mesh_axes[0]
+    return mesh_axes
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
     """Logical-axis -> mesh-axis mapping."""
@@ -40,7 +53,7 @@ class MeshRules:
                 out.append(None)
             else:
                 mesh_axes = getattr(self, ax)
-                out.append(mesh_axes if mesh_axes else None)
+                out.append(_canon_entry(mesh_axes))
         return P(*out)
 
 
@@ -181,8 +194,7 @@ def param_pspec_tree(params, rules: MeshRules):
             if ax is None:
                 axes.append(None)
             else:
-                mesh_axes = getattr(rules, ax)
-                axes.append(mesh_axes if mesh_axes else None)
+                axes.append(_canon_entry(getattr(rules, ax)))
         return P(*axes)
 
     return jax.tree_util.tree_map_with_path(one, params)

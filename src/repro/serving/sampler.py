@@ -1,6 +1,9 @@
 """Token samplers built on the merge-path top-k (paper integration #2).
 
-``topk_sample`` uses ``repro.core.topk_desc`` per batch row; on a
+``topk_sample`` / ``topp_sample`` use the *batched* merge-path top-k
+(``repro.core.topk_batched``): all batch rows ride one fused kv-sort —
+every diagonal binary search of every row's merge rounds shares a single
+vectorized Algorithm 2 pass — instead of a vmapped per-row sort.  On a
 vocab-sharded mesh the serving engine swaps in
 ``repro.core.distributed_topk`` whose combine step is a tree of
 merge-path merges (see core/distributed.py).
@@ -13,7 +16,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import topk_desc
+from repro.core import topk_batched
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -26,7 +29,7 @@ def topk_sample(
     k: int = 40,
     temperature: float = 1.0,
 ) -> jax.Array:
-    vals, idx = jax.vmap(lambda row: topk_desc(row, k))(logits)
+    vals, idx = topk_batched(logits, k)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
@@ -40,7 +43,7 @@ def topp_sample(
     temperature: float = 1.0,
 ) -> jax.Array:
     """Nucleus sampling over the merge-path-sorted top-k_max candidates."""
-    vals, idx = jax.vmap(lambda row: topk_desc(row, k_max))(logits)
+    vals, idx = topk_batched(logits, k_max)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     keep = cum - probs < p  # always keeps the first candidate

@@ -3,15 +3,23 @@
 Multi-device tests (tests/test_distributed.py, test_context_parallel.py)
 spawn subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=N
 so this process never locks a fake device count (per spec).
+
+``hypothesis`` is optional (unavailable in offline containers): the
+property-test modules importorskip it themselves, and the profile below
+is only registered when the package is importable.
 """
 
 import os
 
-# keep hypothesis deadlines off for jit-compiling properties
-from hypothesis import settings
+try:
+    # keep hypothesis deadlines off for jit-compiling properties
+    from hypothesis import settings
+except ImportError:
+    settings = None
 
-settings.register_profile("repro", deadline=None, derandomize=True)
-settings.load_profile("repro")
+if settings is not None:
+    settings.register_profile("repro", deadline=None, derandomize=True)
+    settings.load_profile("repro")
 
 
 def pytest_report_header(config):

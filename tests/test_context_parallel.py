@@ -15,7 +15,7 @@ def test_context_parallel_matches_dense():
     code = textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp, math, functools
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.core.distributed import shard_map  # jax-version compat wrapper
         from repro.serving.context_parallel import context_parallel_decode_attention
 
         B, S, K, G, hd = 2, 64, 2, 3, 16
