@@ -3,11 +3,19 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke bench lint
+# perf-trajectory point written by `make ci` (bump per PR: BENCH_2, BENCH_3, ...)
+BENCH_JSON ?= BENCH_2.json
+
+.PHONY: test bench-smoke bench lint ci
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# full CI: tier-1 tests + smoke benchmarks, recording the perf point that
+# future PRs regress against (uniform batched anchor + ragged relative cost)
+ci: test
+	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
 
 # fast benchmark sweep (<60 s): small sizes of every paper benchmark
 bench-smoke:

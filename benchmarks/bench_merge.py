@@ -137,6 +137,49 @@ def bench_batched_merge(rows: List[Dict], smoke: bool = False) -> None:
     })
 
 
+def bench_ragged_merge(rows: List[Dict], smoke: bool = False) -> None:
+    """Ragged batched Merge Path (PR 2): per-row valid lengths.
+
+    Two claims measured:
+    * ``uniform_fused_batched`` — the regular (non-ragged) fused batched
+      merge at the acceptance size (64, 4096).  This path is untouched by
+      the ragged API (raggedness must not tax it); its timing is the
+      regression anchor recorded in BENCH_*.json.
+    * ``ragged_fused_batched`` — the same batch with random per-row valid
+      lengths through ``merge_batched_ragged``: the price of length
+      masking + capped ranks relative to the uniform pass.
+    * ``ragged_relative_cost`` — the ratio (derived).
+    """
+    from repro.core.batched import merge_batched as core_merge_batched
+    from repro.core.batched import merge_batched_ragged
+
+    # the acceptance size (64, 4096) is kept in smoke mode too — it is the
+    # regression anchor the acceptance criteria compare against
+    bsz, n = 64, 4096
+    a, b = _sorted_rows(bsz, n, seed=13)
+    rng = np.random.default_rng(13)
+    al = jnp.asarray(rng.integers(0, n + 1, bsz), jnp.int32)
+    bl = jnp.asarray(rng.integers(0, n + 1, bsz), jnp.int32)
+    iters, warmup = (3, 1) if smoke else (5, 2)
+    us_uniform = timeit(jax.jit(core_merge_batched), a, b, iters=iters, warmup=warmup)
+    us_ragged = timeit(jax.jit(merge_batched_ragged), a, b, al, bl, iters=iters, warmup=warmup)
+    rows.append({
+        "name": f"ragged_merge/uniform_fused_batched/B={bsz}/n={2*n}",
+        "us_per_call": us_uniform,
+        "derived": f"{bsz*2*n/us_uniform:.1f} Melem/s",
+    })
+    rows.append({
+        "name": f"ragged_merge/ragged_fused_batched/B={bsz}/n={2*n}",
+        "us_per_call": us_ragged,
+        "derived": f"{bsz*2*n/us_ragged:.1f} Melem/s (storage elems)",
+    })
+    rows.append({
+        "name": f"ragged_merge/ragged_relative_cost/B={bsz}/n={2*n}",
+        "us_per_call": 0.0,
+        "derived": f"{us_ragged/us_uniform:.2f}x uniform-path time",
+    })
+
+
 def bench_partition_cost(rows: List[Dict], smoke: bool = False) -> None:
     """Partition stage cost vs p on 10M elements — the paper's O(p log N)."""
     from repro.core import diagonal_intersections

@@ -1,10 +1,13 @@
 """One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` shrinks every benchmark's problem size so the full sweep
-finishes in well under 60 s (CI smoke: ``make bench-smoke``).
+finishes quickly (CI smoke: ``make bench-smoke``).
 ``--only substr`` runs just the benchmarks whose name contains substr.
+``--json PATH`` additionally writes the rows as JSON — ``make ci`` uses
+this to record the per-PR perf trajectory (BENCH_<n>.json).
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -18,8 +21,9 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("--smoke", action="store_true", help="small sizes, finishes in <60s")
+    parser.add_argument("--smoke", action="store_true", help="small sizes, fast sweep")
     parser.add_argument("--only", default="", help="run only benchmarks whose name contains this")
+    parser.add_argument("--json", default="", help="also write rows as JSON to this path")
     args = parser.parse_args()
 
     from benchmarks.bench_merge import (
@@ -28,6 +32,7 @@ def main() -> None:
         bench_merge_throughput,
         bench_moe_dispatch,
         bench_partition_cost,
+        bench_ragged_merge,
         bench_segmented_vs_regular,
         bench_sort,
     )
@@ -37,6 +42,7 @@ def main() -> None:
     for bench in (
         bench_merge_throughput,
         bench_batched_merge,
+        bench_ragged_merge,
         bench_partition_cost,
         bench_load_balance,
         bench_segmented_vs_regular,
@@ -47,10 +53,21 @@ def main() -> None:
             continue
         print(f"# running {bench.__name__} ...", file=sys.stderr, flush=True)
         bench(rows, smoke=args.smoke)
-    print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    total_s = time.perf_counter() - t0
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        payload = {
+            "smoke": bool(args.smoke),
+            "only": args.only,
+            "total_seconds": round(total_s, 1),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -24,8 +24,17 @@ every real consumer needs:
 Conventions match :mod:`repro.core.merge_path`: rows sorted ascending,
 merges stable with A-priority (ties take A first; original order kept
 within each input).  Sentinel padding (``max_sentinel``) is used for
-power-of-two round structure, so payloads must be strictly below the
-dtype's maximum — the same caveat as ``merge_sort``.
+power-of-two round structure; payloads *equal* to the sentinel are safe:
+pads are always appended after the real data, ties resolve by stability
+toward the earlier position, and the ragged/key-value paths additionally
+exclude pads from ranks by **length** rather than by comparison (see the
+ragged section below), so a pad can never shadow a real ``+inf`` /
+``iinfo.max`` key.
+
+The ``*_ragged`` variants carry per-row valid lengths — each row's data
+is a sorted *prefix* of its storage row — which is how production
+batches actually arrive (per-request candidate counts, masked vocab,
+variable bucket sizes).
 
 Everything is jittable and shardable; no Python-level per-row loops.
 """
@@ -38,17 +47,24 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .merge_path import max_sentinel
+from .merge_path import flip_desc, max_sentinel, min_sentinel
 
 __all__ = [
     "searchsorted_batched",
     "diagonal_intersections_batched",
+    "diagonal_intersections_ragged",
     "merge_batched",
     "merge_kv_batched",
+    "merge_batched_ragged",
+    "merge_kv_batched_ragged",
     "merge_sort_batched",
     "merge_sort_kv_batched",
+    "merge_sort_batched_ragged",
+    "merge_sort_kv_batched_ragged",
     "stable_argsort_batched",
+    "stable_argsort_batched_ragged",
     "topk_batched",
+    "topk_batched_ragged",
     "merge_k",
     "merge_k_kv",
     "merge_sort_k",
@@ -134,6 +150,46 @@ def diagonal_intersections_batched(a: jax.Array, b: jax.Array, diags: jax.Array)
     return lo
 
 
+def diagonal_intersections_ragged(
+    a: jax.Array, b: jax.Array, a_lens: jax.Array, b_lens: jax.Array, diags: jax.Array
+) -> jax.Array:
+    """Algorithm 2 over rows with per-row valid lengths.
+
+    Like :func:`diagonal_intersections_batched`, but row ``r``'s inputs
+    are the sorted prefixes ``a[r, :a_lens[r]]`` / ``b[r, :b_lens[r]]``
+    and ``diags`` must lie in ``[0, a_lens[r] + b_lens[r]]`` (clip before
+    calling).  The bisection interval is bounded by the row's *lengths*
+    — ``lo = max(0, d - b_len)``, ``hi = min(d, a_len)`` — so every probe
+    lands inside the valid prefixes and the search never compares against
+    padding, whatever the tails contain.
+    """
+    bsz, na = a.shape
+    nb = b.shape[1]
+    a_lens = _as_lens(a_lens, bsz, na)
+    b_lens = _as_lens(b_lens, bsz, nb)
+    diags = jnp.asarray(diags, jnp.int32)
+    if diags.ndim == 1:
+        diags = jnp.broadcast_to(diags[None, :], (bsz, diags.shape[0]))
+    if na == 0 or nb == 0:
+        return jnp.minimum(diags, a_lens[:, None])
+    lo = jnp.maximum(0, diags - b_lens[:, None])
+    hi = jnp.minimum(diags, a_lens[:, None])
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        av = jnp.take_along_axis(a, jnp.clip(mid, 0, na - 1), axis=1)
+        bv = jnp.take_along_axis(b, jnp.clip(diags - 1 - mid, 0, nb - 1), axis=1)
+        pred = av <= bv  # A-priority: A[i] precedes B[j] iff A[i] <= B[j]
+        active = lo < hi
+        lo2 = jnp.where(active & pred, mid + 1, lo)
+        hi2 = jnp.where(active & ~pred, mid, hi)
+        return lo2, hi2
+
+    lo, hi = jax.lax.fori_loop(0, _bisect_steps(min(na, nb)), body, (lo, hi))
+    return lo
+
+
 def _batched_ranks(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Cross-ranks of every element of every row pair, in one fused pass."""
     na, nb = a.shape[1], b.shape[1]
@@ -179,6 +235,186 @@ def merge_kv_batched(
     keys = jnp.zeros((bsz, na + nb), kd).at[rows, ia].set(ak.astype(kd)).at[rows, ib].set(bk.astype(kd))
     vals = jnp.zeros((bsz, na + nb), vd).at[rows, ia].set(av.astype(vd)).at[rows, ib].set(bv.astype(vd))
     return keys, vals
+
+
+# ---------------------------------------------------------------------------
+# Ragged batched merges: per-row valid lengths
+# ---------------------------------------------------------------------------
+#
+# Production batches are ragged: per-request candidate counts, per-row
+# valid vocab, variable bucket sizes.  The ragged API carries a `(B,)`
+# length vector per input; each row's valid data is a *prefix* of the
+# fixed-width storage row (the padding tail's contents are ignored).
+# Output rows hold the merged valid elements first and sentinel padding
+# after.  Ranks are computed length-aware — pads are excluded by count,
+# never by comparing against the sentinel — so payloads *equal* to the
+# sentinel (real ``+inf`` keys, int ``iinfo.max``) merge correctly even
+# in the key-value forms.
+
+
+def _as_lens(lens, bsz: int, n: int) -> jax.Array:
+    """Normalize a lengths argument to a clipped ``(B,)`` int32 vector."""
+    lens = jnp.asarray(lens, jnp.int32)
+    if lens.ndim == 0:
+        lens = jnp.broadcast_to(lens, (bsz,))
+    if lens.shape != (bsz,):
+        raise ValueError(f"expected lengths of shape ({bsz},), got {lens.shape}")
+    return jnp.clip(lens, 0, n)
+
+def _mask_rows(x: jax.Array, lens: jax.Array, fill) -> jax.Array:
+    """Replace entries at/after each row's length with ``fill``."""
+    col = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(col < lens[:, None], x, jnp.asarray(fill, x.dtype))
+
+
+def _ragged_ranks(
+    a: jax.Array, b: jax.Array, a_lens: jax.Array, b_lens: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Length-aware cross-ranks; pad entries rank past the output row.
+
+    ``a``/``b`` must already be sentinel-masked beyond their lengths (so
+    rows are globally sorted).  The ``left`` search can never count pads
+    (nothing is < the sentinel); the ``right`` search is capped at the
+    cross row's valid length so pads tied with a sentinel-valued payload
+    are not counted.
+    """
+    na, nb = a.shape[1], b.shape[1]
+    n = na + nb
+    ia = jnp.arange(na, dtype=jnp.int32)[None, :]
+    ib = jnp.arange(nb, dtype=jnp.int32)[None, :]
+    ra = ia + jnp.minimum(searchsorted_batched(b, a, side="left"), b_lens[:, None])
+    rb = ib + jnp.minimum(searchsorted_batched(a, b, side="right"), a_lens[:, None])
+    ra = jnp.where(ia < a_lens[:, None], ra, n)
+    rb = jnp.where(ib < b_lens[:, None], rb, n)
+    return ra, rb
+
+
+def merge_batched_ragged(
+    a: jax.Array, b: jax.Array, a_lens, b_lens
+) -> jax.Array:
+    """Stable merge of ``B`` row pairs with per-row valid lengths.
+
+    ``a`` is ``(B, na)``, ``b`` is ``(B, nb)``; row ``r``'s valid data is
+    the sorted prefix ``a[r, :a_lens[r]]`` / ``b[r, :b_lens[r]]`` (the
+    tail contents are ignored).  Returns ``(B, na + nb)`` whose row ``r``
+    starts with the stable A-priority merge of the two valid prefixes
+    (``a_lens[r] + b_lens[r]`` elements) followed by sentinel padding.
+    """
+    bsz, na = a.shape
+    nb = b.shape[1]
+    if b.shape[0] != bsz:
+        raise ValueError(f"batch mismatch: {a.shape} vs {b.shape}")
+    a_lens = _as_lens(a_lens, bsz, na)
+    b_lens = _as_lens(b_lens, bsz, nb)
+    dtype = jnp.result_type(a, b)
+    sent = max_sentinel(dtype)
+    am = _mask_rows(a.astype(dtype), a_lens, sent)
+    bm = _mask_rows(b.astype(dtype), b_lens, sent)
+    ra, rb = _ragged_ranks(am, bm, a_lens, b_lens)
+    rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    out = jnp.full((bsz, na + nb), sent, dtype)
+    out = out.at[rows, ra].set(am, mode="drop")
+    out = out.at[rows, rb].set(bm, mode="drop")
+    return out
+
+
+def merge_kv_batched_ragged(
+    ak: jax.Array, av: jax.Array, bk: jax.Array, bv: jax.Array, a_lens, b_lens
+) -> Tuple[jax.Array, jax.Array]:
+    """Ragged stable key-value merge; see :func:`merge_batched_ragged`.
+
+    Output values past a row's merged length are zero (key slots are
+    sentinel).  Safe for payload keys equal to the sentinel: pads are
+    excluded from ranks by length, so they can never shadow a real
+    ``+inf`` / ``iinfo.max`` key and leak a zero value.
+    """
+    if av.shape != ak.shape or bv.shape != bk.shape:
+        raise ValueError(
+            f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
+            f"values {av.shape}/{bv.shape}"
+        )
+    bsz, na = ak.shape
+    nb = bk.shape[1]
+    if bk.shape[0] != bsz:
+        raise ValueError(f"batch mismatch: {ak.shape} vs {bk.shape}")
+    a_lens = _as_lens(a_lens, bsz, na)
+    b_lens = _as_lens(b_lens, bsz, nb)
+    kd = jnp.result_type(ak, bk)
+    vd = jnp.result_type(av, bv)
+    sent = max_sentinel(kd)
+    akm = _mask_rows(ak.astype(kd), a_lens, sent)
+    bkm = _mask_rows(bk.astype(kd), b_lens, sent)
+    ra, rb = _ragged_ranks(akm, bkm, a_lens, b_lens)
+    rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+    keys = jnp.full((bsz, na + nb), sent, kd)
+    keys = keys.at[rows, ra].set(akm, mode="drop").at[rows, rb].set(bkm, mode="drop")
+    vals = jnp.zeros((bsz, na + nb), vd)
+    vals = vals.at[rows, ra].set(av.astype(vd), mode="drop")
+    vals = vals.at[rows, rb].set(bv.astype(vd), mode="drop")
+    return keys, vals
+
+
+def merge_sort_batched_ragged(x: jax.Array, lens) -> jax.Array:
+    """Sort each row's valid prefix ascending; tail slots become sentinel.
+
+    Pads are sentinel-masked *before* the sort; stability keeps real
+    sentinel-valued payloads (which start at positions < ``lens[r]``)
+    ahead of the pads, so the first ``lens[r]`` outputs are exactly the
+    sorted valid prefix.
+    """
+    bsz, n = x.shape
+    lens = _as_lens(lens, bsz, n)
+    return merge_sort_batched(_mask_rows(x, lens, max_sentinel(x.dtype)))
+
+
+def merge_sort_kv_batched_ragged(
+    keys: jax.Array, values: jax.Array, lens
+) -> Tuple[jax.Array, jax.Array]:
+    """Ragged row-wise stable kv-sort (keys ascending over each valid prefix).
+
+    Row ``r``'s first ``lens[r]`` output pairs are the stably sorted
+    valid pairs; the tail carries sentinel keys with the masked slots'
+    original values (in original order), so the value row remains a
+    permutation of the input row.
+    """
+    bsz, n = keys.shape
+    lens = _as_lens(lens, bsz, n)
+    return merge_sort_kv_batched(
+        _mask_rows(keys, lens, max_sentinel(keys.dtype)), values
+    )
+
+
+def stable_argsort_batched_ragged(keys: jax.Array, lens) -> jax.Array:
+    """Ragged row-wise stable argsort: the first ``lens[r]`` entries of row
+    ``r`` are ``np.argsort(keys[r, :lens[r]], kind="stable")``; the tail
+    lists the masked positions in original order (a full permutation)."""
+    bsz, n = keys.shape
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+    _, perm = merge_sort_kv_batched_ragged(keys, idx, lens)
+    return perm
+
+
+def topk_batched_ragged(x: jax.Array, k: int, lens) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise descending top-k over each row's valid prefix.
+
+    Returns ``(values, indices)``, each ``(B, min(k, n))`` — like
+    :func:`topk_batched` (and ``jax.lax.top_k`` callers expect), ``k``
+    silently truncates to the row width.  Slots ``j >= lens[r]`` (rows
+    with fewer valid candidates than ``k``) return index ``-1`` and the
+    dtype's minimum value.  Tie-breaking matches ``jax.lax.top_k``
+    (smallest index first); int inputs containing ``iinfo.min`` are
+    handled exactly (:func:`repro.core.merge_path.flip_desc`).
+    """
+    bsz, n = x.shape
+    k = min(k, n)
+    lens = _as_lens(lens, bsz, n)
+    perm = stable_argsort_batched_ragged(flip_desc(x), lens)
+    top_idx = perm[:, :k]
+    vals = jnp.take_along_axis(x, top_idx, axis=1)
+    slot_valid = jnp.arange(k, dtype=jnp.int32)[None, :] < lens[:, None]
+    vals = jnp.where(slot_valid, vals, min_sentinel(x.dtype))
+    top_idx = jnp.where(slot_valid, top_idx, -1)
+    return vals, top_idx
 
 
 def _pad_rows_pow2(x: jax.Array, fill) -> jax.Array:
@@ -250,9 +486,12 @@ def topk_batched(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
 
     Stable like :func:`repro.core.merge_path.topk_desc` (among equal values
     the smallest index wins, matching ``jax.lax.top_k``), but all rows ride
-    one batched kv-sort instead of a vmapped per-row sort.
+    one batched kv-sort instead of a vmapped per-row sort.  Descending
+    order comes from the order-flipped keys of
+    :func:`repro.core.merge_path.flip_desc` (bitwise NOT for ints — exact
+    at ``iinfo.min``, where negation would wrap).
     """
-    perm = stable_argsort_batched(-x)
+    perm = stable_argsort_batched(flip_desc(x))
     top_idx = perm[:, :k]
     return jnp.take_along_axis(x, top_idx, axis=1), top_idx
 
@@ -261,67 +500,96 @@ def topk_batched(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
 # k-way tournament merges
 # ---------------------------------------------------------------------------
 
-def _stack_runs(runs):
+def _stack_runs(runs, lens=None):
     """Normalize a ``(k, n)`` array or a sequence of sorted 1-D runs.
 
-    Ragged runs are sentinel-padded to the longest; the total true length
-    is returned so callers can trim the sentinels off the merged tail.
+    Returns ``(stacked, lens, static_total)`` where ``lens`` is the
+    ``(k,)`` int32 per-run valid lengths and ``static_total`` is the
+    total true length when it is known at trace time (list input, or an
+    array with no ``lens``) — ``None`` for a caller-supplied ``lens``
+    (possibly traced), in which case the merged output cannot be trimmed
+    to a data-dependent shape.  Ragged list runs are sentinel-padded to
+    the longest.
     """
     if isinstance(runs, jax.Array) or hasattr(runs, "shape"):
         runs = jnp.asarray(runs)
         if runs.ndim != 2:
             raise ValueError(f"expected (k, n) runs, got shape {runs.shape}")
-        return runs, runs.shape[0] * runs.shape[1]
+        if lens is None:
+            k, n = runs.shape
+            return runs, jnp.full((k,), n, jnp.int32), k * n
+        return runs, _as_lens(lens, runs.shape[0], runs.shape[1]), None
+    if lens is not None:
+        raise ValueError("lens is only valid with a stacked (k, n) runs array")
     runs = [jnp.asarray(r) for r in runs]
     if not runs:
         raise ValueError("merge_k needs at least one run")
     dtype = jnp.result_type(*runs)
-    total = sum(r.shape[0] for r in runs)
     width = max(r.shape[0] for r in runs)
     sent = max_sentinel(dtype)
     padded = [
         jnp.concatenate([r.astype(dtype), jnp.full((width - r.shape[0],), sent, dtype)])
         for r in runs
     ]
-    return jnp.stack(padded), total
+    lens_arr = jnp.array([r.shape[0] for r in runs], jnp.int32)
+    return jnp.stack(padded), lens_arr, sum(r.shape[0] for r in runs)
 
 
-def merge_k(runs) -> jax.Array:
+def merge_k(runs, lens=None) -> jax.Array:
     """Merge ``k`` sorted runs into one sorted array via a pairwise tournament.
 
     ``runs`` is a ``(k, n)`` array of sorted rows, or a sequence of sorted
-    1-D arrays (possibly ragged — shorter runs are sentinel-padded).  The
-    tournament runs ``ceil(log2 k)`` rounds; round ``j`` merges ``k / 2^j``
-    run pairs with one :func:`merge_batched` call, i.e. the co-rank
-    partition applied multiway exactly as in the stable multiway merges of
-    Träff et al. (PAPERS.md).  ``k = 1`` is the identity.
+    1-D arrays (possibly ragged — shorter runs are sentinel-padded).  With
+    a stacked array, ``lens`` optionally gives each row's valid length
+    (the tail is ignored) — the ragged form consumed by
+    ``distributed_sort``'s variable bucket counts.  The tournament runs
+    ``ceil(log2 k)`` rounds; round ``j`` merges ``k / 2^j`` run pairs with
+    one :func:`merge_batched_ragged` call, i.e. the co-rank partition
+    applied multiway exactly as in the stable multiway merges of Träff et
+    al. (PAPERS.md).  ``k = 1`` is the identity.
 
     Stable across runs in input order: ties resolve toward the
     lower-indexed run (tournament rounds always merge lower-index runs as
-    the A side).  Output length is the total number of true elements;
-    sentinel padding is trimmed, which requires payloads strictly below
-    ``max_sentinel(dtype)`` (the module-level caveat).
+    the A side).  Output: all valid elements merged, then sentinel
+    padding; when the total true length is static (list input, or no
+    ``lens``) the padding is trimmed off.  Valid lengths ride through
+    every round, so payloads equal to the sentinel are merged exactly
+    (no strictly-below-sentinel caveat).
     """
-    stacked, total = _stack_runs(runs)
+    stacked, run_lens, static_total = _stack_runs(runs, lens)
+    if static_total is None:
+        # caller-supplied lens: sentinel-normalize the tails up front so the
+        # output contract (valid prefix, then sentinel) holds even for the
+        # k == 1 identity, which runs no merge round
+        stacked = _mask_rows(stacked, run_lens, max_sentinel(stacked.dtype))
     k = stacked.shape[0]
     target = 1 << max(0, (k - 1).bit_length())
     if target != k:
         pad = jnp.full((target - k, stacked.shape[1]), max_sentinel(stacked.dtype), stacked.dtype)
         stacked = jnp.concatenate([stacked, pad], axis=0)
+        run_lens = jnp.concatenate([run_lens, jnp.zeros((target - k,), jnp.int32)])
     while stacked.shape[0] > 1:
-        stacked = merge_batched(stacked[0::2], stacked[1::2])
-    return stacked[0][:total]
+        stacked = merge_batched_ragged(
+            stacked[0::2], stacked[1::2], run_lens[0::2], run_lens[1::2]
+        )
+        run_lens = run_lens[0::2] + run_lens[1::2]
+    out = stacked[0]
+    return out if static_total is None else out[:static_total]
 
 
-def merge_k_kv(key_runs, value_runs) -> Tuple[jax.Array, jax.Array]:
+def merge_k_kv(key_runs, value_runs, lens=None) -> Tuple[jax.Array, jax.Array]:
     """Key-value :func:`merge_k`: merge ``k`` sorted (keys, values) runs.
 
     ``key_runs`` / ``value_runs`` are matching ``(k, n)`` arrays or
-    sequences of matching 1-D runs.  Stable with lower-run priority, like
-    :func:`merge_k`; padded value slots carry zeros and are trimmed with
-    their sentinel keys.
+    sequences of matching 1-D runs; ``lens`` optionally gives per-run
+    valid lengths for a stacked array.  Stable with lower-run priority,
+    like :func:`merge_k`.  Output: merged valid pairs first, then
+    sentinel keys with zero values (trimmed when the total is static).
+    Lengths (not sentinel comparisons) exclude the padding, so payload
+    keys equal to the sentinel keep their values — the failure mode of
+    the pre-ragged tournament.
     """
-    kstack, total = _stack_runs(key_runs)
+    kstack, run_lens, static_total = _stack_runs(key_runs, lens)
     if isinstance(value_runs, jax.Array) or hasattr(value_runs, "shape"):
         vstack = jnp.asarray(value_runs)
     else:
@@ -336,6 +604,11 @@ def merge_k_kv(key_runs, value_runs) -> Tuple[jax.Array, jax.Array]:
         )
     if vstack.shape != kstack.shape:
         raise ValueError(f"key runs {kstack.shape} and value runs {vstack.shape} differ")
+    if static_total is None:
+        # see merge_k: normalize tails so the k == 1 identity honors the
+        # sentinel-keys / zero-values output contract
+        kstack = _mask_rows(kstack, run_lens, max_sentinel(kstack.dtype))
+        vstack = _mask_rows(vstack, run_lens, jnp.zeros((), vstack.dtype))
     k = kstack.shape[0]
     target = 1 << max(0, (k - 1).bit_length())
     if target != k:
@@ -343,9 +616,16 @@ def merge_k_kv(key_runs, value_runs) -> Tuple[jax.Array, jax.Array]:
         vpad = jnp.zeros((target - k, vstack.shape[1]), vstack.dtype)
         kstack = jnp.concatenate([kstack, kpad], axis=0)
         vstack = jnp.concatenate([vstack, vpad], axis=0)
+        run_lens = jnp.concatenate([run_lens, jnp.zeros((target - k,), jnp.int32)])
     while kstack.shape[0] > 1:
-        kstack, vstack = merge_kv_batched(kstack[0::2], vstack[0::2], kstack[1::2], vstack[1::2])
-    return kstack[0][:total], vstack[0][:total]
+        kstack, vstack = merge_kv_batched_ragged(
+            kstack[0::2], vstack[0::2], kstack[1::2], vstack[1::2],
+            run_lens[0::2], run_lens[1::2],
+        )
+        run_lens = run_lens[0::2] + run_lens[1::2]
+    if static_total is None:
+        return kstack[0], vstack[0]
+    return kstack[0][:static_total], vstack[0][:static_total]
 
 
 def _merge_k_groups(runs: jax.Array) -> jax.Array:

@@ -59,13 +59,15 @@ def _axis_size(axis_name: str) -> int:
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
 
+from .batched import merge_k
 from .merge_path import (
     diagonal_intersections,
+    flip_desc,
     max_sentinel,
-    merge,
     merge_sort,
     topk_desc,
 )
+from .segmented import _masked_window_ranks
 
 
 # ---------------------------------------------------------------------------
@@ -79,12 +81,17 @@ def distributed_merge_local(a_shard: jax.Array, b_shard: jax.Array, axis_name: s
     (a_start, b_start) by the cross-diagonal binary search on its own rank's
     equispaced diagonal, and merges exactly ``N/P`` outputs.  Writes are
     disjoint by Lemma 3 — the returned shard *is* this device's slice of S.
+
+    Window ranks are length-masked (:func:`repro.core.segmented._masked_window_ranks`),
+    so sentinel-valued payloads merge exactly — required by the padded
+    wrapper below, whose pads would otherwise shadow them.
     """
     idx = jax.lax.axis_index(axis_name)
     p = _axis_size(axis_name)
     a = jax.lax.all_gather(a_shard, axis_name, tiled=True)
     b = jax.lax.all_gather(b_shard, axis_name, tiled=True)
-    n = a.shape[0] + b.shape[0]
+    na, nb = a.shape[0], b.shape[0]
+    n = na + nb
     seg = n // p
     dtype = jnp.result_type(a, b)
     d0 = idx * seg
@@ -96,18 +103,34 @@ def distributed_merge_local(a_shard: jax.Array, b_shard: jax.Array, axis_name: s
     bp = jnp.concatenate([b.astype(dtype), jnp.full((seg,), max_sentinel(dtype))])
     wa = jax.lax.dynamic_slice(ap, (a0,), (seg,))
     wb = jax.lax.dynamic_slice(bp, (b0,), (seg,))
-    ra = jnp.arange(seg, dtype=jnp.int32) + jnp.searchsorted(wb, wa, side="left").astype(jnp.int32)
-    rb = jnp.arange(seg, dtype=jnp.int32) + jnp.searchsorted(wa, wb, side="right").astype(jnp.int32)
-    out = jnp.zeros(seg, dtype)
+    valid_a = jnp.clip(na - a0, 0, seg)
+    valid_b = jnp.clip(nb - b0, 0, seg)
+    ra, rb = _masked_window_ranks(wa, wb, valid_a, valid_b, seg)
+    out = jnp.full((seg,), max_sentinel(dtype), dtype)
     out = out.at[ra].set(wa, mode="drop")
     out = out.at[rb].set(wb, mode="drop")
     return out
 
 
 def distributed_merge(a: jax.Array, b: jax.Array, mesh: Mesh | None = None, axis: str = "x") -> jax.Array:
-    """Merge two sorted arrays sharded over a 1-D mesh axis."""
+    """Merge two sorted arrays sharded over a 1-D mesh axis.
+
+    ``|A|`` and ``|B|`` need not divide evenly by the axis size: inputs
+    are sentinel-padded up to the next multiple (so each device holds an
+    equal shard), merged, and the padding — which stability keeps after
+    every real element — is trimmed off the gathered result.
+    """
     if mesh is None:
         mesh = Mesh(jax.devices(), (axis,))
+    p = mesh.shape[axis]
+    na, nb = a.shape[0], b.shape[0]
+    pa = -(-na // p) * p
+    pb = -(-nb // p) * p
+    dtype = jnp.result_type(a, b)
+    if pa != na:
+        a = jnp.concatenate([a.astype(dtype), jnp.full((pa - na,), max_sentinel(dtype))])
+    if pb != nb:
+        b = jnp.concatenate([b.astype(dtype), jnp.full((pb - nb,), max_sentinel(dtype))])
     fn = shard_map(
         functools.partial(distributed_merge_local, axis_name=axis),
         mesh=mesh,
@@ -115,26 +138,27 @@ def distributed_merge(a: jax.Array, b: jax.Array, mesh: Mesh | None = None, axis
         out_specs=P(axis),
         check_vma=False,
     )
-    return fn(a, b)
+    return fn(a, b)[: na + nb]
 
 
 # ---------------------------------------------------------------------------
 # distributed sample sort
 # ---------------------------------------------------------------------------
 
-def _pairwise_tree_merge(runs: jax.Array) -> jax.Array:
-    """Merge (R, L) sorted rows into one sorted (R*L,) array, log2(R) rounds."""
-    r = runs.shape[0]
-    # pad #runs to a power of two with sentinel rows
-    target = 1 << max(0, (r - 1).bit_length())
-    if target != r:
-        pad = jnp.full((target - r, runs.shape[1]), max_sentinel(runs.dtype))
-        runs = jnp.concatenate([runs, pad], axis=0)
-    while runs.shape[0] > 1:
-        half = runs.shape[0] // 2
-        merged = jax.vmap(merge)(runs[0::2], runs[1::2])
-        runs = merged
-    return runs[0]
+def _pairwise_tree_merge(runs: jax.Array, lens: jax.Array | None = None) -> jax.Array:
+    """Merge (R, L) sorted rows into one sorted (R*L,) array, log2(R) rounds.
+
+    Thin alias of :func:`repro.core.batched.merge_k`, kept for the
+    distributed bodies.  ``lens`` optionally gives each row's valid
+    length; without it every row counts in full.  Tie-break: stable with
+    lower-row priority (ties resolve toward the lower-indexed run, and
+    within a run original order is kept).  Because ``merge_k`` threads
+    valid lengths through every round instead of trusting sentinel
+    comparisons, int runs whose *data* contains ``iinfo.max`` (or float
+    runs containing ``+inf``) merge exactly — the valid prefix of the
+    result is never polluted by padding.
+    """
+    return merge_k(runs, lens=lens)
 
 
 def distributed_sort_local(
@@ -178,10 +202,17 @@ def distributed_sort_local(
     send = jnp.where(pos < counts[:, None], send, sentinel)
     recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
     recv = recv.reshape(p, cap)  # P sorted runs destined for this device
-    out = _pairwise_tree_merge(recv)  # (P*cap,) ascending, sentinels last
-    count = jnp.sum(jax.lax.all_gather(counts, axis_name, tiled=False), axis=0)[
-        jax.lax.axis_index(axis_name)
-    ]
+    idx = jax.lax.axis_index(axis_name)
+    # (P, P) count matrix: row = sender, col = destination bucket.  This
+    # device's P received runs have the genuinely *ragged* valid lengths
+    # counts_mat[:, idx] (each sender fills its bucket differently), so the
+    # combine is a ragged k-way merge — lengths thread through every round
+    # and the sentinel padding can never pollute the valid prefix, even
+    # for int payloads containing ``iinfo.max``.
+    counts_mat = jax.lax.all_gather(counts, axis_name, tiled=False)
+    recv_lens = counts_mat[:, idx].astype(jnp.int32)
+    out = _pairwise_tree_merge(recv, lens=recv_lens)  # (P*cap,) ascending, sentinels last
+    count = jnp.sum(counts_mat, axis=0)[idx]
     overflow = jax.lax.pmax(overflow_local.astype(jnp.int32), axis_name) > 0
     return out, count[None], overflow
 
@@ -223,8 +254,10 @@ def distributed_topk_local(
     idx0 = jax.lax.axis_index(axis_name) * m
     lv, li = topk_desc(x_shard, k)
     li = li.astype(jnp.int32) + idx0
-    # gather candidate runs; merge on negated keys so ascending merge = descending values
-    keys = jax.lax.all_gather(-lv, axis_name, tiled=False)  # (P, k) each ascending
+    # gather candidate runs; merge on order-flipped keys so ascending merge
+    # = descending values.  flip_desc (an involution: ~~x == x, -(-x) == x)
+    # instead of negation, which wraps int candidates equal to iinfo.min.
+    keys = jax.lax.all_gather(flip_desc(lv), axis_name, tiled=False)  # (P, k) each ascending
     idxs = jax.lax.all_gather(li, axis_name, tiled=False)  # (P, k)
     # tree merge of kv runs
     from .merge_path import merge_kv
@@ -233,15 +266,25 @@ def distributed_topk_local(
     r = runs_k.shape[0]
     target = 1 << max(0, (r - 1).bit_length())
     if target != r:
+        # Pad rows carry sentinel keys (+inf) that *tie* with real +inf
+        # keys (the negated -inf logits).  Their value slots are -1 — an
+        # impossible global index — so a pad that ever survived a merge
+        # round is detectable instead of masquerading as vocab index 0.
+        # With k <= n_valid the A-priority tie-break (real runs are
+        # always the lower-indexed A side of their round) keeps every
+        # real candidate ahead of the pads, so no -1 can surface; tests
+        # assert this under all--inf logits.
         runs_k = jnp.concatenate(
             [runs_k, jnp.full((target - r, k), max_sentinel(runs_k.dtype))], axis=0
         )
-        runs_v = jnp.concatenate([runs_v, jnp.zeros((target - r, k), runs_v.dtype)], axis=0)
+        runs_v = jnp.concatenate(
+            [runs_v, jnp.full((target - r, k), -1, runs_v.dtype)], axis=0
+        )
     while runs_k.shape[0] > 1:
         mk, mv = jax.vmap(merge_kv)(runs_k[0::2], runs_v[0::2], runs_k[1::2], runs_v[1::2])
         # only the first k of every merged run can survive to the global top-k
         runs_k, runs_v = mk[:, :k], mv[:, :k]
-    return -runs_k[0], runs_v[0]
+    return flip_desc(runs_k[0]), runs_v[0]
 
 
 def distributed_topk(

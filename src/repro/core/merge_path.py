@@ -30,6 +30,8 @@ import numpy as np
 
 __all__ = [
     "max_sentinel",
+    "min_sentinel",
+    "flip_desc",
     "diagonal_intersections",
     "merge",
     "merge_kv",
@@ -46,14 +48,44 @@ def max_sentinel(dtype) -> jnp.ndarray:
     """Largest value for ``dtype``, used to pad sorted runs.
 
     Floats use ``+inf`` (not ``finfo.max``) so that real ``+inf`` payloads
-    — e.g. the negated keys of ``-inf`` logits in top-k — tie with the
+    — e.g. the flipped keys of ``-inf`` logits in top-k — tie with the
     padding instead of sorting after it; stability then keeps every real
-    element ahead of the pads, which are always appended last.
+    element ahead of the pads, which are always appended last.  The same
+    tie-then-stability argument covers int payloads equal to
+    ``iinfo.max``.
     """
     dtype = jnp.dtype(dtype)
     if jnp.issubdtype(dtype, jnp.floating):
         return jnp.array(jnp.inf, dtype)
     return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def min_sentinel(dtype) -> jnp.ndarray:
+    """Smallest value for ``dtype`` (``-inf`` / ``iinfo.min``).
+
+    Used to fill top-k value slots past a row's valid length, so masked
+    slots can never outrank real candidates.
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def flip_desc(x: jax.Array) -> jax.Array:
+    """Strictly order-reversing key transform: ``x < y  <=>  flip(x) > flip(y)``.
+
+    Floats negate.  Ints use bitwise NOT (``~x == -x - 1``), which is an
+    exact order-reversing bijection with **no overflow**: ``-x`` wraps at
+    ``iinfo.min`` (UB in C, silent wraparound here — ``-iinfo.min ==
+    iinfo.min``), whereas ``~iinfo.min == iinfo.max``.  Sorting flipped
+    keys ascending with a stable sort therefore yields a stable
+    *descending* order for every dtype, including int arrays containing
+    ``iinfo.min``.
+    """
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return -x
+    return ~x
 
 
 def _search_steps(na: int, nb: int) -> int:
@@ -141,24 +173,30 @@ def merge_kv(
 def partitioned_merge(a: jax.Array, b: jax.Array, p: int) -> jax.Array:
     """Algorithm 1 of the paper, faithfully: p independent segment merges.
 
-    The output is cut into ``p`` equal segments at equispaced cross
-    diagonals; each vmap lane ("core") finds its (a_start, b_start) by the
-    diagonal binary search and then runs the sequential two-pointer merge
-    for exactly ``N/p`` steps.  Zero inter-lane communication, perfect load
+    The output is cut into ``p`` segments at equispaced cross diagonals;
+    each vmap lane ("core") finds its (a_start, b_start) by the diagonal
+    binary search and then runs the sequential two-pointer merge for
+    ``ceil(N/p)`` steps.  Zero inter-lane communication, perfect load
     balance (Corollary 7).  This is the reference parallelization used by
     the benchmarks; the Pallas kernel is its TPU-tile form.
+
+    ``N`` need not divide evenly by ``p``: the last segment is simply
+    short (its diagonal is clamped to ``N`` and the overrun is trimmed),
+    matching the paper's remark that the partition works for arbitrary
+    ``|A|, |B|`` — the same ceil-div + clamped-diagonal scheme as the
+    Pallas kernel's ``_prepare``.
     """
     na, nb = a.shape[0], b.shape[0]
     n = na + nb
-    if n % p != 0:
-        raise ValueError(f"|A|+|B| = {n} must be divisible by p = {p}")
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
     dtype0 = jnp.result_type(a, b)
     if na == 0:
         return b.astype(dtype0)
     if nb == 0:
         return a.astype(dtype0)
-    seg = n // p
-    diags = jnp.arange(p, dtype=jnp.int32) * seg
+    seg = -(-n // p)  # ceil-div: last segment may be short
+    diags = jnp.minimum(jnp.arange(p, dtype=jnp.int32) * seg, n)
     a_starts = diagonal_intersections(a, b, diags)
     b_starts = diags - a_starts
     dtype = jnp.result_type(a, b)
@@ -176,7 +214,7 @@ def partitioned_merge(a: jax.Array, b: jax.Array, p: int) -> jax.Array:
         (_, _), outs = jax.lax.scan(step, (ai0, bi0), None, length=seg)
         return outs
 
-    return jax.vmap(seg_merge)(a_starts, b_starts).reshape(n)
+    return jax.vmap(seg_merge)(a_starts, b_starts).reshape(p * seg)[:n]
 
 
 def _pad_pow2(x: jax.Array, fill) -> jax.Array:
@@ -231,10 +269,12 @@ def stable_argsort(keys: jax.Array) -> jax.Array:
 def topk_desc(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     """(values, indices) of the k largest elements, descending, stable.
 
-    Sorts negated keys with the stable kv-sort so that among equal values
-    the smallest index wins — matching ``jax.lax.top_k`` tie-breaking.
+    Sorts order-flipped keys (:func:`flip_desc` — bitwise NOT for ints,
+    so no wraparound at ``iinfo.min``) with the stable kv-sort so that
+    among equal values the smallest index wins — matching
+    ``jax.lax.top_k`` tie-breaking.
     """
-    keys = -x
+    keys = flip_desc(x)
     idx = jnp.arange(x.shape[0], dtype=jnp.int32)
     _, perm = merge_sort_kv(keys, idx)
     top_idx = perm[:k]

@@ -12,6 +12,14 @@ Key guarantee (Lemma 16 / Theorem 17): a path segment of length L consumes
 at most L consecutive elements of A and at most L consecutive elements of
 B, and the segment's p sub-partitions can be found from those 2L elements
 alone — so each outer iteration touches a bounded window.
+
+Length-awareness: ``|A| + |B|`` need **not** divide evenly by the segment
+size — the grid is ceil-div and the last segment is short.  Windows that
+overrun an input are sentinel-padded, but ranks and the path advance are
+computed from the windows' *valid lengths*, never from comparisons
+against the sentinel — so payloads equal to the sentinel (real ``+inf``
+keys, int ``iinfo.max``) merge correctly, including in the key-value
+form where a pad/payload mix-up would surface pad values.
 """
 
 from __future__ import annotations
@@ -21,26 +29,36 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .merge_path import diagonal_intersections, max_sentinel
+from .merge_path import max_sentinel
 
 
-def _window_merge(wa: jax.Array, wb: jax.Array, out_len: int) -> jax.Array:
-    """Merge the first ``out_len`` outputs of two sorted windows.
+def _masked_window_ranks(
+    wa: jax.Array, wb: jax.Array, valid_a: jax.Array, valid_b: jax.Array, out_len: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Cross-ranks of two sorted windows, counting only valid elements.
 
-    Rank-based (the tile form used by the Pallas kernel): cross-ranks via
-    comparisons, then scatter.  Elements whose rank lands beyond
-    ``out_len`` belong to a later segment and are dropped here (they are
-    re-staged by that segment's window — the paper's "not all elements
-    will be used" remark after Thm 17).
+    ``wa``/``wb`` are fixed-size windows whose first ``valid_a``/``valid_b``
+    entries are real data and whose tail is sentinel padding.  Rank = own
+    index + number of *valid* cross elements preceding (A-priority ties).
+    The ``side="left"`` count never includes pads (nothing is < the
+    sentinel); the ``side="right"`` count is capped at ``valid_a`` so pads
+    tied with a sentinel-valued payload are not counted.  Pad entries get
+    rank ``out_len``; valid elements can also rank past ``out_len`` —
+    both are dropped by the caller's scatter, the latter belonging to a
+    later segment that re-stages them through its own window (the
+    paper's "not all elements will be used" remark after Thm 17).
     """
     L = wa.shape[0]
-    dtype = jnp.result_type(wa, wb)
-    ra = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wb, wa, side="left").astype(jnp.int32)
-    rb = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wa, wb, side="right").astype(jnp.int32)
-    out = jnp.zeros(out_len, dtype)
-    out = out.at[jnp.where(ra < out_len, ra, out_len)].set(wa.astype(dtype), mode="drop")
-    out = out.at[jnp.where(rb < out_len, rb, out_len)].set(wb.astype(dtype), mode="drop")
-    return out
+    io = jnp.arange(L, dtype=jnp.int32)
+    ra = io + jnp.minimum(
+        jnp.searchsorted(wb, wa, side="left").astype(jnp.int32), valid_b
+    )
+    rb = io + jnp.minimum(
+        jnp.searchsorted(wa, wb, side="right").astype(jnp.int32), valid_a
+    )
+    ra = jnp.where(io < valid_a, ra, out_len)
+    rb = jnp.where(io < valid_b, rb, out_len)
+    return ra, rb
 
 
 def segmented_merge(a: jax.Array, b: jax.Array, segment: int) -> jax.Array:
@@ -49,42 +67,57 @@ def segmented_merge(a: jax.Array, b: jax.Array, segment: int) -> jax.Array:
     A ``lax.scan`` walks the segments in order, carrying the global
     (a_offset, b_offset) path position — the ``startingPoint`` of
     Algorithm 3.  Within a segment, work is fully parallel (vectorized
-    rank computation = the p cooperating cores).
+    rank computation = the p cooperating cores).  ``|A| + |B|`` may be
+    any size: the grid is ``ceil(N / segment)`` and the last segment is
+    short.
     """
     na, nb = a.shape[0], b.shape[0]
     n = na + nb
-    if n % segment != 0:
-        raise ValueError(f"|A|+|B| = {n} must be divisible by segment = {segment}")
-    num_seg = n // segment
+    if segment < 1:
+        raise ValueError(f"segment must be >= 1, got {segment}")
+    num_seg = -(-n // segment)  # ceil-div: last segment may be short
     dtype = jnp.result_type(a, b)
-    # Sentinel-pad so fixed-size windows never read out of bounds; pads are
-    # +inf so they always lose comparisons and ranks stay correct.
+    # Sentinel-pad so fixed-size windows never read out of bounds; ranks
+    # and the path advance only ever count the windows' valid prefixes.
     ap = jnp.concatenate([a.astype(dtype), jnp.full((segment,), max_sentinel(dtype))])
     bp = jnp.concatenate([b.astype(dtype), jnp.full((segment,), max_sentinel(dtype))])
+    io = jnp.arange(segment, dtype=jnp.int32)
 
     def step(carry, _):
         a_off, b_off = carry
         wa = jax.lax.dynamic_slice(ap, (a_off,), (segment,))
         wb = jax.lax.dynamic_slice(bp, (b_off,), (segment,))
-        out = _window_merge(wa, wb, segment)
-        # End-of-segment path position: local diagonal `segment` within the
-        # window == global diagonal advance (Theorem 17).
-        da = diagonal_intersections(wa, wb, jnp.array([segment], jnp.int32))[0]
-        return (a_off + da, b_off + (segment - da)), out
+        valid_a = jnp.clip(na - a_off, 0, segment)
+        valid_b = jnp.clip(nb - b_off, 0, segment)
+        ra, rb = _masked_window_ranks(wa, wb, valid_a, valid_b, segment)
+        out = jnp.zeros(segment, dtype).at[ra].set(wa, mode="drop").at[rb].set(wb, mode="drop")
+        # End-of-segment path position: exactly the valid elements whose
+        # rank fell inside this segment were consumed (Theorem 17).
+        da = jnp.sum((ra < segment).astype(jnp.int32))
+        db = jnp.sum((rb < segment).astype(jnp.int32))
+        return (a_off + da, b_off + db), out
 
-    (_, _), outs = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg)
-    return outs.reshape(n)
+    (_, _), outs = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg
+    )
+    return outs.reshape(num_seg * segment)[:n]
 
 
 def segmented_merge_kv(
     ak: jax.Array, av: jax.Array, bk: jax.Array, bv: jax.Array, segment: int
 ) -> Tuple[jax.Array, jax.Array]:
-    """Key-value SPM (stable, A-priority)."""
+    """Key-value SPM (stable, A-priority).
+
+    Like :func:`segmented_merge`, residue-free (any ``|A| + |B|``) and
+    safe for payload keys equal to the sentinel: pads are excluded from
+    ranks by window length, not by comparison, so a pad can never shadow
+    a real ``+inf`` / ``iinfo.max`` key and leak its zero value.
+    """
     na, nb = ak.shape[0], bk.shape[0]
     n = na + nb
-    if n % segment != 0:
-        raise ValueError(f"|A|+|B| = {n} must be divisible by segment = {segment}")
-    num_seg = n // segment
+    if segment < 1:
+        raise ValueError(f"segment must be >= 1, got {segment}")
+    num_seg = -(-n // segment)
     kd = jnp.result_type(ak, bk)
     vd = jnp.result_type(av, bv)
     akp = jnp.concatenate([ak.astype(kd), jnp.full((segment,), max_sentinel(kd))])
@@ -98,15 +131,16 @@ def segmented_merge_kv(
         wbk = jax.lax.dynamic_slice(bkp, (b_off,), (segment,))
         wav = jax.lax.dynamic_slice(avp, (a_off,), (segment,))
         wbv = jax.lax.dynamic_slice(bvp, (b_off,), (segment,))
-        L = segment
-        ra = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wbk, wak, side="left").astype(jnp.int32)
-        rb = jnp.arange(L, dtype=jnp.int32) + jnp.searchsorted(wak, wbk, side="right").astype(jnp.int32)
-        ra = jnp.where(ra < L, ra, L)
-        rb = jnp.where(rb < L, rb, L)
-        ko = jnp.zeros(L, kd).at[ra].set(wak, mode="drop").at[rb].set(wbk, mode="drop")
-        vo = jnp.zeros(L, vd).at[ra].set(wav, mode="drop").at[rb].set(wbv, mode="drop")
-        da = diagonal_intersections(wak, wbk, jnp.array([segment], jnp.int32))[0]
-        return (a_off + da, b_off + (segment - da)), (ko, vo)
+        valid_a = jnp.clip(na - a_off, 0, segment)
+        valid_b = jnp.clip(nb - b_off, 0, segment)
+        ra, rb = _masked_window_ranks(wak, wbk, valid_a, valid_b, segment)
+        ko = jnp.zeros(segment, kd).at[ra].set(wak, mode="drop").at[rb].set(wbk, mode="drop")
+        vo = jnp.zeros(segment, vd).at[ra].set(wav, mode="drop").at[rb].set(wbv, mode="drop")
+        da = jnp.sum((ra < segment).astype(jnp.int32))
+        db = jnp.sum((rb < segment).astype(jnp.int32))
+        return (a_off + da, b_off + db), (ko, vo)
 
-    (_, _), (ks, vs) = jax.lax.scan(step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg)
-    return ks.reshape(n), vs.reshape(n)
+    (_, _), (ks, vs) = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0)), None, length=num_seg
+    )
+    return ks.reshape(num_seg * segment)[:n], vs.reshape(num_seg * segment)[:n]

@@ -4,7 +4,9 @@ from . import ops, ref
 from .merge_path import (
     DEFAULT_TILE,
     merge_batched_pallas,
+    merge_batched_ragged_pallas,
     merge_kv_batched_pallas,
+    merge_kv_batched_ragged_pallas,
     merge_kv_pallas,
     merge_pallas,
 )
@@ -16,5 +18,7 @@ __all__ = [
     "merge_kv_pallas",
     "merge_batched_pallas",
     "merge_kv_batched_pallas",
+    "merge_batched_ragged_pallas",
+    "merge_kv_batched_ragged_pallas",
     "DEFAULT_TILE",
 ]

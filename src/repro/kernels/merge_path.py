@@ -41,7 +41,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.batched import diagonal_intersections_batched
+from repro.core.batched import (
+    _as_lens,
+    _mask_rows,
+    diagonal_intersections_batched,
+    diagonal_intersections_ragged,
+)
 from repro.core.merge_path import diagonal_intersections, max_sentinel
 
 DEFAULT_TILE = 512
@@ -54,12 +59,41 @@ def _tile_ranks(wak: jax.Array, wbk: jax.Array) -> Tuple[jax.Array, jax.Array]:
     restricted to the tile.  Row sums give how many B elements precede
     each A element; column sums of the complement (with ties going to A)
     give the symmetric count.  rank = own index + cross count.
+
+    Sentinel pads rank like real elements here; that is exact for
+    **keys-only** tiles (a pad tied with a sentinel-valued payload writes
+    the same value), which is why the keys-only kernels keep this cheaper
+    form.  Key-*value* tiles must distinguish pads from payloads — they
+    use :func:`_tile_ranks_masked`.
     """
     t = wak.shape[0]
     iot = jnp.arange(t, dtype=jnp.int32)
     m = wak[:, None] > wbk[None, :]  # (T, T) merge matrix tile
     ra = iot + jnp.sum(m, axis=1, dtype=jnp.int32)  # A[i] after B[j] iff B[j] < A[i]
     rb = iot + jnp.sum(~m, axis=0, dtype=jnp.int32)  # B[j] after A[i] iff A[i] <= B[j]
+    return ra, rb
+
+
+def _tile_ranks_masked(
+    wak: jax.Array, wbk: jax.Array, valid_a: jax.Array, valid_b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Length-aware cross-ranks: only the windows' valid prefixes count.
+
+    ``valid_a`` / ``valid_b`` are the number of real (non-pad) elements at
+    the head of each window.  Pads are excluded from the cross counts by
+    *index*, never by comparing against the sentinel, so payload keys
+    equal to the sentinel (real ``+inf``, int ``iinfo.max``) rank exactly;
+    pad entries themselves rank ``T`` (outside the tile, dropped).
+    """
+    t = wak.shape[0]
+    iot = jnp.arange(t, dtype=jnp.int32)
+    m = wak[:, None] > wbk[None, :]
+    jvalid = iot[None, :] < valid_b
+    ivalid = iot[:, None] < valid_a
+    ra = iot + jnp.sum(m & jvalid, axis=1, dtype=jnp.int32)
+    rb = iot + jnp.sum((~m) & ivalid, axis=0, dtype=jnp.int32)
+    ra = jnp.where(iot < valid_a, ra, t)
+    rb = jnp.where(iot < valid_b, rb, t)
     return ra, rb
 
 
@@ -105,6 +139,8 @@ def _merge_kv_kernel(
     vo_ref,
     *,
     tile: int,
+    na: int,
+    nb: int,
 ):
     t = pl.program_id(0)
     a0 = a_starts[t]
@@ -113,7 +149,11 @@ def _merge_kv_kernel(
     wbk = bk_ref[pl.ds(b0, tile)]
     wav = av_ref[pl.ds(a0, tile)]
     wbv = bv_ref[pl.ds(b0, tile)]
-    ra, rb = _tile_ranks(wak, wbk)
+    # Length-masked ranks: a window pad tied with a real sentinel-valued
+    # key must not steal its slot and surface a zero value.
+    valid_a = jnp.clip(na - a0, 0, tile)
+    valid_b = jnp.clip(nb - b0, 0, tile)
+    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
     ko_ref[...] = _permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile)
     vo_ref[...] = _permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile)
 
@@ -190,7 +230,7 @@ def merge_kv_pallas(
         ],
     )
     ko, vo = pl.pallas_call(
-        functools.partial(_merge_kv_kernel, tile=tile),
+        functools.partial(_merge_kv_kernel, tile=tile, na=ak.shape[0], nb=bk.shape[0]),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((nt * tile,), kd),
@@ -250,6 +290,8 @@ def _merge_kv_batched_kernel(
     vo_ref,
     *,
     tile: int,
+    na: int,
+    nb: int,
 ):
     bi = pl.program_id(0)
     ti = pl.program_id(1)
@@ -259,7 +301,9 @@ def _merge_kv_batched_kernel(
     wbk = bk_ref[bi, pl.ds(b0, tile)]
     wav = av_ref[bi, pl.ds(a0, tile)]
     wbv = bv_ref[bi, pl.ds(b0, tile)]
-    ra, rb = _tile_ranks(wak, wbk)
+    valid_a = jnp.clip(na - a0, 0, tile)
+    valid_b = jnp.clip(nb - b0, 0, tile)
+    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
     ko_ref[...] = (_permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile))[None, :]
     vo_ref[...] = (_permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile))[None, :]
 
@@ -349,7 +393,9 @@ def merge_kv_batched_pallas(
         ],
     )
     ko, vo = pl.pallas_call(
-        functools.partial(_merge_kv_batched_kernel, tile=tile),
+        functools.partial(
+            _merge_kv_batched_kernel, tile=tile, na=ak.shape[1], nb=bk.shape[1]
+        ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((bsz, nt * tile), kd),
@@ -357,4 +403,203 @@ def merge_kv_batched_pallas(
         ],
         interpret=interpret,
     )(a_starts, b_starts, akp, avp, bkp, bvp)
+    return ko[:, :n], vo[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Ragged batched merges: per-row length tables via scalar prefetch
+# ---------------------------------------------------------------------------
+#
+# The ragged form is the batched kernel with one addition: alongside the
+# (B, nt) start tables, the per-row valid lengths ride in as scalar-
+# prefetch operands (SMEM).  Each (batch, tile) grid step derives its
+# windows' valid prefixes from the length tables and uses the length-
+# masked Merge Matrix reduction, so padding never shadows a payload and
+# output slots past a row's merged length are filled with the sentinel.
+# The partition phase clamps every row's diagonals to that row's total
+# valid length, so short rows simply run out of work early (their
+# trailing tiles write pure sentinel blocks).
+
+
+def _permute_fill(rank: jax.Array, window: jax.Array, t: int) -> Tuple[jax.Array, jax.Array]:
+    """Like :func:`_permute_select`, but also returns per-slot coverage."""
+    k = jnp.arange(t, dtype=jnp.int32)
+    onehot = rank[:, None] == k[None, :]
+    zero = jnp.zeros((), window.dtype)
+    val = jnp.sum(jnp.where(onehot, window[:, None], zero), axis=0)
+    count = jnp.sum(onehot, axis=0, dtype=jnp.int32)
+    return val, count
+
+
+def _merge_batched_ragged_kernel(
+    a_starts,  # scalar prefetch (SMEM): (B, nt) per-(batch, tile) A starts
+    b_starts,
+    a_lens,  # scalar prefetch (SMEM): (B,) per-row valid lengths
+    b_lens,
+    a_ref,  # (B, na + T) sentinel-masked + sentinel-padded rows
+    b_ref,
+    o_ref,  # (1, T) VMEM output block
+    *,
+    tile: int,
+):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    a0 = a_starts[bi, ti]
+    b0 = b_starts[bi, ti]
+    wa = a_ref[bi, pl.ds(a0, tile)]
+    wb = b_ref[bi, pl.ds(b0, tile)]
+    valid_a = jnp.clip(a_lens[bi] - a0, 0, tile)
+    valid_b = jnp.clip(b_lens[bi] - b0, 0, tile)
+    ra, rb = _tile_ranks_masked(wa, wb, valid_a, valid_b)
+    va, ca = _permute_fill(ra, wa, tile)
+    vb, cb = _permute_fill(rb, wb, tile)
+    sent = max_sentinel(wa.dtype)
+    o_ref[...] = jnp.where(ca + cb > 0, va + vb, sent)[None, :]
+
+
+def _merge_kv_batched_ragged_kernel(
+    a_starts,
+    b_starts,
+    a_lens,
+    b_lens,
+    ak_ref,
+    av_ref,
+    bk_ref,
+    bv_ref,
+    ko_ref,
+    vo_ref,
+    *,
+    tile: int,
+):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    a0 = a_starts[bi, ti]
+    b0 = b_starts[bi, ti]
+    wak = ak_ref[bi, pl.ds(a0, tile)]
+    wbk = bk_ref[bi, pl.ds(b0, tile)]
+    wav = av_ref[bi, pl.ds(a0, tile)]
+    wbv = bv_ref[bi, pl.ds(b0, tile)]
+    valid_a = jnp.clip(a_lens[bi] - a0, 0, tile)
+    valid_b = jnp.clip(b_lens[bi] - b0, 0, tile)
+    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
+    ka, ca = _permute_fill(ra, wak, tile)
+    kb, cb = _permute_fill(rb, wbk, tile)
+    sent = max_sentinel(wak.dtype)
+    ko_ref[...] = jnp.where(ca + cb > 0, ka + kb, sent)[None, :]
+    # uncovered value slots sum to zero already — the pad-value convention
+    vo_ref[...] = (_permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile))[None, :]
+
+
+def _prepare_batched_ragged(a, b, a_lens, b_lens, tile):
+    """Partition phase for the ragged kernel: per-row clamped diagonals.
+
+    Rows are sentinel-masked beyond their lengths (so windows stay
+    sorted whatever the caller left in the padding), and each row's
+    diagonals are clamped to its own total valid length — the bisection
+    of ``diagonal_intersections_ragged`` then never probes padding.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"expected (B, na) and (B, nb) with equal B, got {a.shape} and {b.shape}")
+    dtype = jnp.result_type(a, b)
+    bsz, na = a.shape
+    nb = b.shape[1]
+    a_lens = _as_lens(a_lens, bsz, na)
+    b_lens = _as_lens(b_lens, bsz, nb)
+    sent = max_sentinel(dtype)
+    am = _mask_rows(a.astype(dtype), a_lens, sent)
+    bm = _mask_rows(b.astype(dtype), b_lens, sent)
+    n = na + nb
+    nt = pl.cdiv(n, tile)
+    row_total = (a_lens + b_lens)[:, None]  # (B, 1)
+    diags = jnp.minimum(jnp.arange(nt, dtype=jnp.int32)[None, :] * tile, row_total)
+    a_starts = diagonal_intersections_ragged(am, bm, a_lens, b_lens, diags).astype(jnp.int32)
+    b_starts = diags - a_starts
+    ap = jnp.concatenate([am, jnp.full((bsz, tile), sent, dtype)], axis=1)
+    bp = jnp.concatenate([bm, jnp.full((bsz, tile), sent, dtype)], axis=1)
+    return ap, bp, a_starts, b_starts, a_lens, b_lens, bsz, n, nt, dtype
+
+
+def merge_batched_ragged_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    a_lens,
+    b_lens,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged batched merge on the 2-D ``(batch, tile)`` grid SPM kernel.
+
+    Row ``r`` of the ``(B, na + nb)`` result starts with the stable
+    A-priority merge of ``a[r, :a_lens[r]]`` and ``b[r, :b_lens[r]]``,
+    followed by sentinel padding — bit-identical to
+    :func:`repro.core.batched.merge_batched_ragged`.  The per-row length
+    tables ride in as scalar-prefetch operands next to the start tables.
+    """
+    ap, bp, a_starts, b_starts, a_lens, b_lens, bsz, n, nt, dtype = _prepare_batched_ragged(
+        a, b, a_lens, b_lens, tile
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bsz, nt),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_merge_batched_ragged_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nt * tile), dtype),
+        interpret=interpret,
+    )(a_starts, b_starts, a_lens, b_lens, ap, bp)
+    return out[:, :n]
+
+
+def merge_kv_batched_ragged_pallas(
+    ak: jax.Array,
+    av: jax.Array,
+    bk: jax.Array,
+    bv: jax.Array,
+    a_lens,
+    b_lens,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ragged batched key-value merge on the 2-D-grid SPM kernel.
+
+    Bit-identical to :func:`repro.core.batched.merge_kv_batched_ragged`:
+    merged valid pairs first, then sentinel keys with zero values.
+    """
+    if av.shape != ak.shape or bv.shape != bk.shape:
+        raise ValueError(
+            f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
+            f"values {av.shape}/{bv.shape}"
+        )
+    akp, bkp, a_starts, b_starts, a_lens, b_lens, bsz, n, nt, kd = _prepare_batched_ragged(
+        ak, bk, a_lens, b_lens, tile
+    )
+    vd = jnp.result_type(av, bv)
+    avp = jnp.concatenate([av.astype(vd), jnp.zeros((bsz, tile), vd)], axis=1)
+    bvp = jnp.concatenate([bv.astype(vd), jnp.zeros((bsz, tile), vd)], axis=1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bsz, nt),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+            pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
+        ],
+    )
+    ko, vo = pl.pallas_call(
+        functools.partial(_merge_kv_batched_ragged_kernel, tile=tile),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nt * tile), kd),
+            jax.ShapeDtypeStruct((bsz, nt * tile), vd),
+        ],
+        interpret=interpret,
+    )(a_starts, b_starts, a_lens, b_lens, akp, avp, bkp, bvp)
     return ko[:, :n], vo[:, :n]

@@ -80,6 +80,49 @@ def merge_kv_batched(
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_batched_ragged(
+    a: jax.Array,
+    b: jax.Array,
+    a_lens: jax.Array,
+    b_lens: jax.Array,
+    *,
+    tile: int = _kern.DEFAULT_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged batched merge: per-row valid lengths, sentinel-padded tails.
+
+    Dispatches like :func:`merge_batched`: the fused pure-JAX ragged merge
+    for narrow rows, the 2-D-grid ragged kernel (lengths via scalar
+    prefetch) when rows are wide enough to tile.
+    """
+    if a.shape[1] + b.shape[1] <= tile:
+        return _bat.merge_batched_ragged(a, b, a_lens, b_lens)
+    return _kern.merge_batched_ragged_pallas(
+        a, b, a_lens, b_lens, tile=tile, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_kv_batched_ragged(
+    ak: jax.Array,
+    av: jax.Array,
+    bk: jax.Array,
+    bv: jax.Array,
+    a_lens: jax.Array,
+    b_lens: jax.Array,
+    *,
+    tile: int = _kern.DEFAULT_TILE,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ragged batched key-value merge (2-D-grid ragged kernel when wide)."""
+    if ak.shape[1] + bk.shape[1] <= tile:
+        return _bat.merge_kv_batched_ragged(ak, av, bk, bv, a_lens, b_lens)
+    return _kern.merge_kv_batched_ragged_pallas(
+        ak, av, bk, bv, a_lens, b_lens, tile=tile, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def sort(x: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True) -> jax.Array:
     """Bottom-up merge sort whose wide rounds run on the batched Pallas kernel.
 

@@ -31,7 +31,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import merge_sort_kv_batched, searchsorted_batched
+from repro.core import (
+    merge_sort_kv_batched,
+    merge_sort_kv_batched_ragged,
+    searchsorted_batched,
+)
 from repro.parallel.sharding import constrain
 from .layers import dense_init, mlp_apply, mlp_init, _act
 
@@ -55,7 +59,9 @@ def capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
     return max(8, -(-c // 8) * 8)  # pad to lane-friendly multiple
 
 
-def _positions_merge_path_batched(flat_expert: jax.Array, e: int) -> jax.Array:
+def _positions_merge_path_batched(
+    flat_expert: jax.Array, e: int, slot_lens: jax.Array | None = None
+) -> jax.Array:
     """Merge-path dispatch for the whole batch: position-in-expert per slot.
 
     flat_expert: (B, N) int32 expert ids (N = tokens*k per row).  Returns
@@ -66,15 +72,37 @@ def _positions_merge_path_batched(flat_expert: jax.Array, e: int) -> jax.Array:
     searches share a single fused Algorithm 2 pass instead of a vmapped
     per-row sort.  Expert start offsets fall out of a batched binary
     search over the sorted ids (the same cross-diagonal search).
+
+    ``slot_lens`` makes the dispatch **ragged**: only the first
+    ``slot_lens[r]`` slots of row ``r`` (= ``valid_tokens * k``, padding
+    tokens sit at the sequence tail) are routed.  The ragged kv-sort
+    pushes masked slots past every real assignment, so padding tokens
+    can never consume expert capacity and every valid token keeps the
+    position it would have in an unpadded batch.  Masked slots report
+    an over-capacity position, so the usual ``pos < capacity``
+    test drops them with no extra mask.
     """
     b, n = flat_expert.shape
     slots = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-    sorted_e, sorted_slot = merge_sort_kv_batched(flat_expert, slots)  # stable
+    if slot_lens is None:
+        sorted_e, sorted_slot = merge_sort_kv_batched(flat_expert, slots)  # stable
+    else:
+        sorted_e, sorted_slot = merge_sort_kv_batched_ragged(
+            flat_expert, slots, slot_lens
+        )
     experts = jnp.broadcast_to(jnp.arange(e, dtype=flat_expert.dtype)[None, :], (b, e))
     offsets = searchsorted_batched(sorted_e, experts, side="left")  # (B, E)
     pos_sorted = jnp.arange(n, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
-        offsets, sorted_e.astype(jnp.int32), axis=1
+        offsets, jnp.clip(sorted_e.astype(jnp.int32), 0, e - 1), axis=1
     )
+    if slot_lens is not None:
+        # masked slots (rank >= row length) always report an over-capacity
+        # position; real slots are unaffected
+        pos_sorted = jnp.where(
+            jnp.arange(n, dtype=jnp.int32)[None, :] < slot_lens[:, None],
+            pos_sorted,
+            jnp.int32(2**30),
+        )
     # scatter positions back to original slot order
     rows = jnp.arange(b, dtype=jnp.int32)[:, None]
     return jnp.zeros((b, n), jnp.int32).at[rows, sorted_slot].set(pos_sorted)
@@ -92,8 +120,21 @@ def _positions_cumsum(flat_expert: jax.Array, e: int) -> jax.Array:
     return jnp.take_along_axis(pos, flat_expert[:, None], axis=1)[:, 0]
 
 
-def moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """x (B,S,d) -> (B,S,d). Batch axis stays sharded; experts tensor-sharded."""
+def moe_apply(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    token_counts: jax.Array | None = None,
+) -> jax.Array:
+    """x (B,S,d) -> (B,S,d). Batch axis stays sharded; experts tensor-sharded.
+
+    ``token_counts`` (optional, ``(B,)`` int32) marks each row's valid
+    token count — padding tokens occupy the sequence tail.  With it, the
+    merge-path dispatch runs **ragged**: padded tokens are masked out of
+    the routing sort, never consume expert capacity, and contribute zero
+    output, so every valid token gets exactly the capacity position it
+    would get in an unpadded batch.
+    """
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
     cap = capacity(cfg, s)
@@ -106,10 +147,17 @@ def moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     # one batched stable kv-sort (a single fused Alg. 2 pass across the
     # whole batch) rather than a vmapped per-row sort.
     flat_e = top_e.reshape(b, s * k).astype(jnp.int32)  # (B, S*k)
+    slot_lens = None
+    if token_counts is not None:
+        # slots are token-major, so valid slots form the prefix tokens*k
+        slot_lens = jnp.clip(jnp.asarray(token_counts, jnp.int32), 0, s) * k
     if cfg.moe_dispatch == "merge_path":
-        pos = _positions_merge_path_batched(flat_e, e)  # (B, S*k)
+        pos = _positions_merge_path_batched(flat_e, e, slot_lens)  # (B, S*k)
     else:
         pos = jax.vmap(lambda fe: _positions_cumsum(fe, e))(flat_e)
+        if slot_lens is not None:
+            slot_ids = jnp.arange(s * k, dtype=jnp.int32)[None, :]
+            pos = jnp.where(slot_ids < slot_lens[:, None], pos, jnp.int32(2**30))
     kept = pos < cap
     tok = jnp.broadcast_to(
         jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, s * k)

@@ -7,6 +7,26 @@ vectorized Algorithm 2 pass — instead of a vmapped per-row sort.  On a
 vocab-sharded mesh the serving engine swaps in
 ``repro.core.distributed_topk`` whose combine step is a tree of
 merge-path merges (see core/distributed.py).
+
+**Masked vocab** (``vocab_lens``): serving vocabularies are padded to
+lane-friendly widths, so only a prefix of every logit row is real.
+Instead of faking it by ``-inf``-filling the tail (which collides with
+genuinely ``-inf`` logits — banned tokens — once keys are flipped for
+the descending sort), the samplers route through
+``repro.core.topk_batched_ragged``: the valid length bounds the sort
+itself, masked slots return index ``-1``/probability 0, and — when
+``vocab_lens[r] >= k`` so both draws see the same candidate count — a
+padded row is sampled *bit-identically* to its unpadded truncation.
+(With fewer valid tokens than ``k`` the candidate tensor is shaped
+differently, so the draw consumes the PRNG differently: the sampled
+*distribution* still matches, the exact token for a given key may not.)
+
+Contract for degenerate rows: a row with ``vocab_lens[r] == 0`` has no
+valid token to sample, so the samplers return ``-1`` for it — the same
+out-of-band marker the ragged top-k uses.  Callers must treat negative
+token ids as "no token" (never feed them to a gather, where JAX's
+negative indexing would silently wrap to the last vocab entry).  Rows
+with ``vocab_lens[r] >= 1`` always return a valid in-prefix id.
 """
 
 from __future__ import annotations
@@ -16,11 +36,20 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import topk_batched
+from repro.core import topk_batched, topk_batched_ragged
 
 
 def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _topk_candidates(
+    logits: jax.Array, k: int, vocab_lens
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row top-k candidates, optionally over a ragged valid-vocab prefix."""
+    if vocab_lens is None:
+        return topk_batched(logits, k)
+    return topk_batched_ragged(logits, k, vocab_lens)
 
 
 def topk_sample(
@@ -28,10 +57,15 @@ def topk_sample(
     key: jax.Array,
     k: int = 40,
     temperature: float = 1.0,
+    vocab_lens=None,  # optional (B,) or scalar: valid vocab prefix per row
 ) -> jax.Array:
-    vals, idx = topk_batched(logits, k)
+    vals, idx = _topk_candidates(logits, k, vocab_lens)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
-    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
+    loglik = jnp.log(jnp.maximum(probs, 1e-30))
+    # masked-vocab slots are -inf, not floor-probability: they can never be
+    # drawn while any valid candidate exists (a lens==0 row returns -1)
+    loglik = jnp.where(idx >= 0, loglik, -jnp.inf)
+    choice = jax.random.categorical(key, loglik)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
 
 
@@ -41,12 +75,16 @@ def topp_sample(
     p: float = 0.9,
     k_max: int = 128,
     temperature: float = 1.0,
+    vocab_lens=None,
 ) -> jax.Array:
     """Nucleus sampling over the merge-path-sorted top-k_max candidates."""
-    vals, idx = topk_batched(logits, k_max)
+    vals, idx = _topk_candidates(logits, k_max, vocab_lens)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
+    probs = jnp.where(idx >= 0, probs, 0.0)
     cum = jnp.cumsum(probs, axis=-1)
     keep = cum - probs < p  # always keeps the first candidate
     probs = jnp.where(keep, probs, 0.0)
-    choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
+    loglik = jnp.log(jnp.maximum(probs, 1e-30))
+    loglik = jnp.where(idx >= 0, loglik, -jnp.inf)  # see topk_sample
+    choice = jax.random.categorical(key, loglik)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)

@@ -102,3 +102,51 @@ def test_sharded_train_step_on_debug_mesh():
         assert abs(sharded_loss - float(m1["loss"])) < 1e-2, (sharded_loss, float(m1["loss"]))
         print("ok", sharded_loss)
     """, n=8)
+
+
+def test_ragged_hardening_distributed():
+    """PR 2 regressions in one subprocess: non-divisible distributed_merge,
+    ragged bucket counts with iinfo.max payloads in distributed_sort, and
+    no pad-index leakage from distributed_topk under all--inf shards."""
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed_merge, distributed_sort, distributed_topk
+        rng = np.random.default_rng(7)
+        # merge: |A|, |B| not divisible by P=8
+        for na, nb in [(513, 511), (700, 37), (5, 1000)]:
+            a = np.sort(rng.standard_normal(na)).astype(np.float32)
+            b = np.sort(rng.standard_normal(nb)).astype(np.float32)
+            out = np.asarray(distributed_merge(jnp.array(a), jnp.array(b)))
+            assert out.shape == (na + nb,)
+            assert np.allclose(out, np.sort(np.concatenate([a, b]))), (na, nb)
+        # sample sort: int payloads equal to the sentinel ride the ragged
+        # bucket combine exactly
+        M = np.iinfo(np.int32).max
+        x = rng.integers(-1000, 1000, 2048).astype(np.int32)
+        x[:5] = M
+        s, cnt, ovf = distributed_sort(jnp.array(x))
+        s, cnt = np.asarray(s), np.asarray(cnt)
+        assert not np.asarray(ovf)
+        P = 8; percap = s.shape[0] // P
+        got = np.concatenate([s[i*percap:i*percap+cnt[i]] for i in range(P)])
+        assert (got == np.sort(x)).all()
+        # top-k: shards full of -inf logits (keys tie with the pad
+        # sentinel) must never surface a pad index
+        x = np.full(4096, -np.inf, np.float32)
+        x[100] = 1.0; x[3000] = 2.0
+        v, i = distributed_topk(jnp.array(x), 16)
+        v, i = np.asarray(v), np.asarray(i)
+        assert (i >= 0).all(), i
+        rv, ri = jax.lax.top_k(jnp.array(x), 16)
+        assert np.array_equal(v, np.asarray(rv)) and (i == np.asarray(ri)).all()
+        # int shards containing iinfo.min: the flip_desc combine must not
+        # wrap them into spurious global maxima
+        m = np.iinfo(np.int32).min
+        xi = np.full(64, m, np.int32)
+        xi[10] = 5; xi[40] = -3
+        v, i = distributed_topk(jnp.array(xi), 4)
+        rv, ri = jax.lax.top_k(jnp.array(xi), 4)
+        assert (np.asarray(v) == np.asarray(rv)).all()
+        assert (np.asarray(i) == np.asarray(ri)).all()
+        print("ok")
+    """)
