@@ -4,7 +4,7 @@
 PY ?= python
 
 # perf-trajectory point written by `make ci` (bump per PR: BENCH_2, BENCH_3, ...)
-BENCH_JSON ?= BENCH_2.json
+BENCH_JSON ?= BENCH_3.json
 
 .PHONY: test bench-smoke bench lint ci
 

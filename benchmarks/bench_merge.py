@@ -256,6 +256,7 @@ def bench_segmented_vs_regular(rows: List[Dict], smoke: bool = False) -> None:
 
 def bench_sort(rows: List[Dict], smoke: bool = False) -> None:
     from repro.core import merge_sort
+    from repro.kernels import ops as kops
 
     sizes = (1 << 12,) if smoke else (1 << 14, 1 << 17)
     for n in sizes:
@@ -264,10 +265,18 @@ def bench_sort(rows: List[Dict], smoke: bool = False) -> None:
         iters, warmup = (3, 1) if smoke else (5, 2)
         us_mp = timeit(jax.jit(merge_sort), x, iters=iters, warmup=warmup)
         us_xla = timeit(jax.jit(jnp.sort), x, iters=iters, warmup=warmup)
+        # kernel-backed sort: wide rounds on the flat round kernel
+        # (hierarchical engine, autotuned (tile, leaf), padding hoisted)
+        us_ko = timeit(kops.sort, x, iters=iters, warmup=warmup)
         rows.append({
             "name": f"sort/merge_path/n={n}",
             "us_per_call": us_mp,
             "derived": f"{n/us_mp:.1f} Melem/s",
+        })
+        rows.append({
+            "name": f"sort/pallas_flat_rounds/n={n}",
+            "us_per_call": us_ko,
+            "derived": f"{n/us_ko:.1f} Melem/s",
         })
         rows.append({
             "name": f"sort/xla_baseline/n={n}",

@@ -36,11 +36,13 @@ def main() -> None:
         bench_segmented_vs_regular,
         bench_sort,
     )
+    from benchmarks.bench_tile_engine import bench_tile_engine
 
     rows = []
     t0 = time.perf_counter()
     for bench in (
         bench_merge_throughput,
+        bench_tile_engine,
         bench_batched_merge,
         bench_ragged_merge,
         bench_partition_cost,

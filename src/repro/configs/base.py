@@ -38,7 +38,9 @@ class ModelConfig:
     experts_per_token: int = 0
     capacity_factor: float = 1.25
     shared_expert_ff: int = 0  # dense shared-expert MLP width (0 = none)
-    moe_dispatch: str = "merge_path"  # "merge_path" | "cumsum" (ablation baseline)
+    # "merge_path" (fused pure-JAX batched sort) | "merge_path_pallas"
+    # (hierarchical tile engine, repro.kernels.ops) | "cumsum" (ablation)
+    moe_dispatch: str = "merge_path"
 
     # --- SSM (mamba1) ---
     ssm_state: int = 0

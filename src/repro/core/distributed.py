@@ -162,7 +162,10 @@ def _pairwise_tree_merge(runs: jax.Array, lens: jax.Array | None = None) -> jax.
 
 
 def distributed_sort_local(
-    x_shard: jax.Array, axis_name: str, capacity_factor: float = 2.0
+    x_shard: jax.Array,
+    axis_name: str,
+    capacity_factor: float = 2.0,
+    local_sort: str = "core",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-device sample sort body.
 
@@ -171,13 +174,24 @@ def distributed_sort_local(
     of valid elements, and a global overflow flag (any element dropped
     anywhere — callers either assert it is false or retry with a larger
     capacity factor).
+
+    ``local_sort="pallas"`` runs the per-device sort on the hierarchical
+    tile engine (``repro.kernels.ops.sort``, autotuned ``(tile, leaf)``)
+    instead of the pure-JAX rounds — the local sort is the compute-bound
+    stage of the sample sort, so it is the one worth a kernel.  The tiny
+    splitter-candidate sort (``P*P`` elements) stays on the core path.
     """
     p = _axis_size(axis_name)
     m = x_shard.shape[0]
     cap = int(capacity_factor * m)
     # round capacity up so it is lane-aligned
     cap = -(-cap // 128) * 128
-    local = merge_sort(x_shard)
+    if local_sort == "pallas":
+        from repro.kernels import ops as kops  # deferred: kernels layer optional here
+
+        local = kops.sort(x_shard)
+    else:
+        local = merge_sort(x_shard)
     # P equispaced local samples as splitter candidates
     samp_idx = (jnp.arange(p) * m) // p
     cands = jax.lax.all_gather(local[samp_idx], axis_name, tiled=True)  # (P*P,)
@@ -222,12 +236,18 @@ def distributed_sort(
     mesh: Mesh | None = None,
     axis: str = "x",
     capacity_factor: float = 2.0,
+    local_sort: str = "core",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Sample-sort a sharded array; see :func:`distributed_sort_local`."""
     if mesh is None:
         mesh = Mesh(jax.devices(), (axis,))
     fn = shard_map(
-        functools.partial(distributed_sort_local, axis_name=axis, capacity_factor=capacity_factor),
+        functools.partial(
+            distributed_sort_local,
+            axis_name=axis,
+            capacity_factor=capacity_factor,
+            local_sort=local_sort,
+        ),
         mesh=mesh,
         in_specs=(P(axis),),
         out_specs=(P(axis), P(axis), P()),

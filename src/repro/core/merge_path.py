@@ -32,6 +32,7 @@ __all__ = [
     "max_sentinel",
     "min_sentinel",
     "flip_desc",
+    "bisect_steps",
     "diagonal_intersections",
     "merge",
     "merge_kv",
@@ -88,15 +89,20 @@ def flip_desc(x: jax.Array) -> jax.Array:
     return ~x
 
 
-def _search_steps(na: int, nb: int) -> int:
-    """Fixed trip count that guarantees the bisection below converges.
+def bisect_steps(span: int) -> int:
+    """Fixed trip count that guarantees a bisection over an interval of
+    length ``span + 1`` converges (each step at least halves the interval).
 
-    The search interval length is at most ``min(na, nb) + 1`` (a cross
-    diagonal has at most ``min(|A|, |B|)`` cells — paper Thm 14), and each
-    step at least halves it.
+    This is THE trip counter for every fixed-trip binary search in the
+    repo — the diagonal searches here (where a cross diagonal has at most
+    ``min(|A|, |B|)`` cells, paper Thm 14, so ``span = min(|A|, |B|)``),
+    the batched/ragged searches in :mod:`repro.core.batched`, and the
+    kernel-side level-2 sub-diagonal split in
+    :mod:`repro.kernels.merge_path`.  Deriving the count from the
+    theorem's bound keeps every search jittable (no data-dependent trip
+    counts) without a per-call-site re-derivation.
     """
-    span = min(na, nb) + 1
-    return max(1, int(math.ceil(math.log2(span))) + 1)
+    return max(1, int(math.ceil(math.log2(span + 1))) + 1)
 
 
 def diagonal_intersections(a: jax.Array, b: jax.Array, diags: jax.Array) -> jax.Array:
@@ -133,7 +139,7 @@ def diagonal_intersections(a: jax.Array, b: jax.Array, diags: jax.Array) -> jax.
         hi2 = jnp.where(active & ~pred, mid, hi)
         return lo2, hi2
 
-    lo, hi = jax.lax.fori_loop(0, _search_steps(na, nb), body, (lo, hi))
+    lo, hi = jax.lax.fori_loop(0, bisect_steps(min(na, nb)), body, (lo, hi))
     return lo
 
 

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the Merge Path hot spots (+ jnp oracles)."""
 
-from . import ops, ref
+from . import ops, ref, tune
 from .merge_path import (
+    DEFAULT_ENGINE,
+    DEFAULT_LEAF,
     DEFAULT_TILE,
     merge_batched_pallas,
     merge_batched_ragged_pallas,
@@ -9,16 +11,23 @@ from .merge_path import (
     merge_kv_batched_ragged_pallas,
     merge_kv_pallas,
     merge_pallas,
+    sort_round_kv_pallas,
+    sort_round_pallas,
 )
 
 __all__ = [
     "ops",
     "ref",
+    "tune",
     "merge_pallas",
     "merge_kv_pallas",
     "merge_batched_pallas",
     "merge_kv_batched_pallas",
     "merge_batched_ragged_pallas",
     "merge_kv_batched_ragged_pallas",
+    "sort_round_pallas",
+    "sort_round_kv_pallas",
     "DEFAULT_TILE",
+    "DEFAULT_LEAF",
+    "DEFAULT_ENGINE",
 ]

@@ -11,14 +11,30 @@ onto the TPU memory hierarchy:
   once, vectorized, *outside* the kernel and its results ride in as
   scalar-prefetch operands (SMEM) that the BlockSpec machinery and the
   kernel body use to slice dynamic input windows — the TPU analogue of
-  the paper's "p cores independently compute their start points";
-* the per-tile merge materializes the paper's **Merge Matrix** for the
-  tile (T x T comparisons) and reduces it to cross-ranks.  On a CPU the
-  paper rightly avoids ever materializing M; on a TPU, VPU compare+reduce
-  throughput makes the T^2 tile matrix the cheap, branch-free choice.
-  Ranks are then applied as a one-hot permutation (masked sum — exact for
-  every dtype incl. int32; for f32/bf16 an MXU ``dot`` with the one-hot
-  matrix is equivalent).
+  the paper's "p cores independently compute their start points".
+
+Inside a tile, two engines are available (``engine=`` on every wrapper):
+
+* ``"hier"`` (default) — the **hierarchical two-level tile engine**.  The
+  paper's partition idea is applied *again inside the tile* (the
+  recursion Siebert & Träff's co-ranking makes explicit): a fixed-trip
+  vectorized bisection over the tile's sub-diagonals (level 2 of the
+  partition; ``repro.core.batched.window_intersections``) cuts the
+  T-output tile into ``ceil(T/S)`` leaves of ``S`` outputs each
+  (VPU-lane-aligned, default ``S = 32``), and only the ``(S, S)`` leaf
+  materializes the paper's Merge Matrix to get cross-ranks.  Rank
+  application is an O(T) gather driven by the leaf ranks plus the
+  sub-partition offsets (no ``(T, T)`` one-hot).  Per-tile work drops
+  from O(T^2) to O(T*S + T log T); quadratic work only ever happens at
+  the fixed leaf size.
+* ``"matrix"`` — the original single-level engine: materialize the full
+  ``(T, T)`` Merge Matrix and apply ranks via a ``(T, T)`` one-hot
+  masked sum.  Kept as the bit-exactness oracle for the hierarchical
+  engine and as the benchmark baseline (``bench_tile_engine``).
+
+Both engines share the masked/unmasked leaf-rank forms, so the ragged /
+key-value length-masking guarantees (pads excluded from ranks by *index*,
+never by comparing against the sentinel) carry through unchanged.
 
 Output tiles are *exactly* T elements each (Corollary 7 — equal output
 partitions is the whole point of the path partition), so the output uses
@@ -28,13 +44,18 @@ Inputs stay in ``pl.ANY`` (compiler-chosen, HBM for large arrays) and the
 kernel slices dynamic windows from them; on real hardware the production
 variant would stage those windows via ``pltpu.make_async_copy`` into
 double-buffered VMEM scratch — in interpret mode (this container is
-CPU-only) the dynamic-slice form is the validated path.
+CPU-only) the dynamic-slice form is the validated path.  The
+hierarchical engine's leaf-window extraction and rank application use
+vector gathers (``take_along_axis``-style); on hardware generations
+without native VPU gather the leaf-scale one-hot form of the ``matrix``
+engine at ``T = S`` is the fallback.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +67,42 @@ from repro.core.batched import (
     _mask_rows,
     diagonal_intersections_batched,
     diagonal_intersections_ragged,
+    window_intersections,
 )
 from repro.core.merge_path import diagonal_intersections, max_sentinel
 
 DEFAULT_TILE = 512
+DEFAULT_LEAF = 32
+DEFAULT_ENGINE = "hier"
+
+
+def _env_interpret() -> bool:
+    """Read REPRO_PALLAS_INTERPRET: '0'/'false'/'no'/'off' -> compiled,
+    anything else (or unset) -> interpret mode (this container is
+    CPU-only, so interpret is the safe default)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1").strip().lower() not in (
+        "0",
+        "false",
+        "no",
+        "off",
+    )
+
+
+DEFAULT_INTERPRET: bool = _env_interpret()
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return DEFAULT_INTERPRET if interpret is None else interpret
+
+
+def _norm_leaf(tile: int, leaf: int) -> int:
+    """Clamp the leaf width into [1, tile] (an S > T leaf is pure waste)."""
+    return max(1, min(int(leaf), int(tile)))
+
+
+# ---------------------------------------------------------------------------
+# Single-level ("matrix") tile engine: the full (T, T) merge matrix
+# ---------------------------------------------------------------------------
 
 
 def _tile_ranks(wak: jax.Array, wbk: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -110,6 +163,217 @@ def _permute_select(rank: jax.Array, window: jax.Array, t: int) -> jax.Array:
     return jnp.sum(jnp.where(onehot, window[:, None], zero), axis=0)
 
 
+def _permute_fill(rank: jax.Array, window: jax.Array, t: int) -> Tuple[jax.Array, jax.Array]:
+    """Like :func:`_permute_select`, but also returns per-slot coverage."""
+    k = jnp.arange(t, dtype=jnp.int32)
+    onehot = rank[:, None] == k[None, :]
+    zero = jnp.zeros((), window.dtype)
+    val = jnp.sum(jnp.where(onehot, window[:, None], zero), axis=0)
+    count = jnp.sum(onehot, axis=0, dtype=jnp.int32)
+    return val, count
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-level tile engine
+# ---------------------------------------------------------------------------
+#
+# Level 1 (host side, unchanged): Alg. 2 over the *global* cross diagonals
+# produces per-tile (a_start, b_start) scalar-prefetch tables.  Level 2
+# (in-kernel, new): Alg. 2 again, over the tile's own sub-diagonals
+# (0, S, 2S, ...), splits the T-output tile into leaves of S outputs —
+# Lemma 16 applies recursively, so leaf l needs at most S consecutive
+# elements of each window starting at its sub-partition point.  Only the
+# (S, S) leaf computes cross-ranks via the merge matrix; ranks are applied
+# with an O(T) gather (below), so the T^2 term of the single-level engine
+# becomes T*S + T log T.
+
+
+def _leaf_ranks(la: jax.Array, lb: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(S, S) merge-matrix cross-ranks for every leaf at once.
+
+    ``la`` / ``lb`` are ``(L, S)`` stacked leaf windows.  Same math as
+    :func:`_tile_ranks`, batched over the leaf axis: total work L*S^2 =
+    T*S instead of T^2.
+    """
+    s = la.shape[1]
+    iot = jnp.arange(s, dtype=jnp.int32)
+    m = la[:, :, None] > lb[:, None, :]  # (L, S, S) leaf merge matrices
+    ra = iot[None, :] + jnp.sum(m, axis=2, dtype=jnp.int32)
+    rb = iot[None, :] + jnp.sum(~m, axis=1, dtype=jnp.int32)
+    return ra, rb
+
+
+def _leaf_ranks_masked(
+    la: jax.Array, lb: jax.Array, valid_a: jax.Array, valid_b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Length-aware leaf cross-ranks; ``valid_a``/``valid_b`` are ``(L,)``
+    per-leaf valid prefix lengths.  Pads are excluded by index (never by
+    sentinel comparison) exactly as in :func:`_tile_ranks_masked`; pad
+    entries rank ``S`` (outside the leaf, dropped by the apply step)."""
+    s = la.shape[1]
+    iot = jnp.arange(s, dtype=jnp.int32)
+    m = la[:, :, None] > lb[:, None, :]
+    jvalid = iot[None, None, :] < valid_b[:, None, None]  # (L, 1, S)
+    ivalid = iot[None, :, None] < valid_a[:, None, None]  # (L, S, 1)
+    ra = iot[None, :] + jnp.sum(m & jvalid, axis=2, dtype=jnp.int32)
+    rb = iot[None, :] + jnp.sum((~m) & ivalid, axis=1, dtype=jnp.int32)
+    ra = jnp.where(iot[None, :] < valid_a[:, None], ra, s)
+    rb = jnp.where(iot[None, :] < valid_b[:, None], rb, s)
+    return ra, rb
+
+
+def _hier_merge_window(
+    wak: jax.Array,
+    wbk: jax.Array,
+    *,
+    tile: int,
+    leaf: int,
+    wav: Optional[jax.Array] = None,
+    wbv: Optional[jax.Array] = None,
+    valid_a: Optional[jax.Array] = None,
+    valid_b: Optional[jax.Array] = None,
+    fill: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Two-level merge of one tile's windows → ``(keys, values | None)``.
+
+    1. **Level-2 split**: one fixed-trip vectorized bisection
+       (:func:`repro.core.batched.window_intersections`) over the tile's
+       sub-diagonals ``0, S, 2S, ...`` yields each leaf's sub-partition
+       point ``(sa_l, sb_l)`` — O((T/S) log T).
+    2. **Leaf ranks**: the ``(S, S)`` merge matrix of every leaf window
+       pair, reduced to cross-ranks (masked when valid lengths are given)
+       — O(T*S) total, the only quadratic-in-anything step.
+    3. **O(T) gather apply**: for output slot ``j`` of a leaf,
+       ``alpha[j] = |{i : ra[i] < j}|`` counts the A-side contributions
+       among the first ``j`` leaf outputs (``ra`` is strictly increasing,
+       so this is a rank lookup, computed leaf-locally); slot ``j`` is an
+       A output iff ``ra[alpha[j]] == j``, and the element is *gathered*
+       from ``la[alpha[j]]`` / ``lb[j - alpha[j]]`` — two O(T) gathers
+       instead of the (T, T) one-hot.
+
+    ``fill=True`` (ragged callers): slots past the windows' merged valid
+    length get sentinel keys / zero values — bit-identical to the matrix
+    engine's coverage-count fill.
+    """
+    s = _norm_leaf(tile, leaf)
+    nleaf = -(-tile // s)  # ceil-div: last leaf may be short (trimmed below)
+    masked = valid_a is not None
+    kd = wak.dtype
+    sent = max_sentinel(kd)
+    diags = jnp.arange(nleaf, dtype=jnp.int32) * s
+    if masked:
+        valid_a = jnp.asarray(valid_a, jnp.int32)
+        valid_b = jnp.asarray(valid_b, jnp.int32)
+        total = valid_a + valid_b
+        diags = jnp.minimum(diags, total)
+        sa = window_intersections(wak, wbk, diags, valid_a, valid_b)
+    else:
+        sa = window_intersections(wak, wbk, diags)
+    sb = diags - sa
+    iot = jnp.arange(s, dtype=jnp.int32)
+    ia = sa[:, None] + iot[None, :]  # (L, S) leaf-window gather indices
+    ib = sb[:, None] + iot[None, :]
+    # pad the tile windows by one leaf so leaf windows never overrun
+    wakp = jnp.concatenate([wak, jnp.full((s,), sent, kd)])
+    wbkp = jnp.concatenate([wbk, jnp.full((s,), sent, kd)])
+    la = wakp[ia]
+    lb = wbkp[ib]
+    if masked:
+        va = jnp.clip(valid_a - sa, 0, s)  # (L,) valid prefix of each leaf window
+        vb = jnp.clip(valid_b - sb, 0, s)
+        ra, _ = _leaf_ranks_masked(la, lb, va, vb)
+    else:
+        ra, _ = _leaf_ranks(la, lb)
+    # Clamp to S before the alpha count: a valid element belonging to a
+    # *later* leaf can rank past S, and pads rank exactly S — clamping
+    # keeps the per-leaf rank vector sorted without changing any count
+    # of ranks < j for j < S.
+    ra_c = jnp.minimum(ra, s)
+    jj = iot[None, :]  # output slot within leaf
+    alpha = jnp.sum(ra_c[:, :, None] < iot[None, None, :], axis=1, dtype=jnp.int32)
+    is_a = jnp.take_along_axis(ra_c, alpha, axis=1) == jj  # alpha[l, j] <= j < S: in bounds
+    src_b = jj - alpha
+    keys = jnp.where(
+        is_a,
+        jnp.take_along_axis(la, alpha, axis=1),
+        jnp.take_along_axis(lb, src_b, axis=1),
+    )
+    out_k = keys.reshape(nleaf * s)[:tile]
+    out_v = None
+    if wav is not None:
+        vd = wav.dtype
+        wavp = jnp.concatenate([wav, jnp.zeros((s,), vd)])
+        wbvp = jnp.concatenate([wbv, jnp.zeros((s,), vd)])
+        vals = jnp.where(
+            is_a,
+            jnp.take_along_axis(wavp[ia], alpha, axis=1),
+            jnp.take_along_axis(wbvp[ib], src_b, axis=1),
+        )
+        out_v = vals.reshape(nleaf * s)[:tile]
+    if masked and fill:
+        covered = jnp.arange(tile, dtype=jnp.int32) < total
+        out_k = jnp.where(covered, out_k, sent)
+        if out_v is not None:
+            out_v = jnp.where(covered, out_v, jnp.zeros((), out_v.dtype))
+    return out_k, out_v
+
+
+def _tile_merge(
+    wak: jax.Array,
+    wbk: jax.Array,
+    *,
+    tile: int,
+    leaf: int,
+    engine: str,
+    wav: Optional[jax.Array] = None,
+    wbv: Optional[jax.Array] = None,
+    valid_a: Optional[jax.Array] = None,
+    valid_b: Optional[jax.Array] = None,
+    fill: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Engine dispatch for one tile: merge two windows into T outputs.
+
+    ``engine="hier"`` → :func:`_hier_merge_window`;
+    ``engine="matrix"`` → the (T, T) merge-matrix + one-hot path.
+    Both produce bit-identical merged prefixes; ``fill`` additionally
+    makes uncovered (past-the-valid-end) slots bit-identical (sentinel
+    keys, zero values) for the ragged kernels whose padding is visible.
+    """
+    if engine == "hier":
+        return _hier_merge_window(
+            wak,
+            wbk,
+            tile=tile,
+            leaf=leaf,
+            wav=wav,
+            wbv=wbv,
+            valid_a=valid_a,
+            valid_b=valid_b,
+            fill=fill,
+        )
+    if engine != "matrix":
+        raise ValueError(f"unknown tile engine {engine!r} (expected 'hier' or 'matrix')")
+    if valid_a is None:
+        ra, rb = _tile_ranks(wak, wbk)
+    else:
+        ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
+    if fill:
+        ka, ca = _permute_fill(ra, wak, tile)
+        kb, cb = _permute_fill(rb, wbk, tile)
+        keys = jnp.where(ca + cb > 0, ka + kb, max_sentinel(wak.dtype))
+    else:
+        keys = _permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile)
+    vals = None
+    if wav is not None:
+        vals = _permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile)
+    return keys, vals
+
+
+# ---------------------------------------------------------------------------
+# 1-D merges
+# ---------------------------------------------------------------------------
+
+
 def _merge_kernel(
     a_starts,  # scalar prefetch (SMEM): per-tile A start
     b_starts,  # scalar prefetch (SMEM): per-tile B start
@@ -118,14 +382,14 @@ def _merge_kernel(
     o_ref,  # (T,) VMEM output block
     *,
     tile: int,
+    leaf: int,
+    engine: str,
 ):
     t = pl.program_id(0)
-    a0 = a_starts[t]
-    b0 = b_starts[t]
-    wa = a_ref[pl.ds(a0, tile)]
-    wb = b_ref[pl.ds(b0, tile)]
-    ra, rb = _tile_ranks(wa, wb)
-    o_ref[...] = _permute_select(ra, wa, tile) + _permute_select(rb, wb, tile)
+    wa = a_ref[pl.ds(a_starts[t], tile)]
+    wb = b_ref[pl.ds(b_starts[t], tile)]
+    keys, _ = _tile_merge(wa, wb, tile=tile, leaf=leaf, engine=engine)
+    o_ref[...] = keys
 
 
 def _merge_kv_kernel(
@@ -139,6 +403,8 @@ def _merge_kv_kernel(
     vo_ref,
     *,
     tile: int,
+    leaf: int,
+    engine: str,
     na: int,
     nb: int,
 ):
@@ -153,9 +419,12 @@ def _merge_kv_kernel(
     # key must not steal its slot and surface a zero value.
     valid_a = jnp.clip(na - a0, 0, tile)
     valid_b = jnp.clip(nb - b0, 0, tile)
-    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
-    ko_ref[...] = _permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile)
-    vo_ref[...] = _permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile)
+    ko, vo = _tile_merge(
+        wak, wbk, tile=tile, leaf=leaf, engine=engine,
+        wav=wav, wbv=wbv, valid_a=valid_a, valid_b=valid_b,
+    )
+    ko_ref[...] = ko
+    vo_ref[...] = vo
 
 
 def _prepare(a, b, tile):
@@ -179,7 +448,9 @@ def merge_pallas(
     b: jax.Array,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Merge two sorted 1-D arrays with the Pallas SPM kernel."""
     ap, bp, a_starts, b_starts, n, nt, dtype = _prepare(a, b, tile)
@@ -193,10 +464,10 @@ def merge_pallas(
         out_specs=pl.BlockSpec((tile,), lambda t, *_: (t,)),
     )
     out = pl.pallas_call(
-        functools.partial(_merge_kernel, tile=tile),
+        functools.partial(_merge_kernel, tile=tile, leaf=_norm_leaf(tile, leaf), engine=engine),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nt * tile,), dtype),
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, ap, bp)
     return out[:n]
 
@@ -208,7 +479,9 @@ def merge_kv_pallas(
     bv: jax.Array,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Stable key-value merge with the Pallas SPM kernel."""
     if av.shape != ak.shape or bv.shape != bk.shape:
@@ -230,13 +503,20 @@ def merge_kv_pallas(
         ],
     )
     ko, vo = pl.pallas_call(
-        functools.partial(_merge_kv_kernel, tile=tile, na=ak.shape[0], nb=bk.shape[0]),
+        functools.partial(
+            _merge_kv_kernel,
+            tile=tile,
+            leaf=_norm_leaf(tile, leaf),
+            engine=engine,
+            na=ak.shape[0],
+            nb=bk.shape[0],
+        ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((nt * tile,), kd),
             jax.ShapeDtypeStruct((nt * tile,), vd),
         ],
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, akp, avp, bkp, bvp)
     return ko[:n], vo[:n]
 
@@ -268,15 +548,15 @@ def _merge_batched_kernel(
     o_ref,  # (1, T) VMEM output block
     *,
     tile: int,
+    leaf: int,
+    engine: str,
 ):
     bi = pl.program_id(0)
     ti = pl.program_id(1)
-    a0 = a_starts[bi, ti]
-    b0 = b_starts[bi, ti]
-    wa = a_ref[bi, pl.ds(a0, tile)]
-    wb = b_ref[bi, pl.ds(b0, tile)]
-    ra, rb = _tile_ranks(wa, wb)
-    o_ref[...] = (_permute_select(ra, wa, tile) + _permute_select(rb, wb, tile))[None, :]
+    wa = a_ref[bi, pl.ds(a_starts[bi, ti], tile)]
+    wb = b_ref[bi, pl.ds(b_starts[bi, ti], tile)]
+    keys, _ = _tile_merge(wa, wb, tile=tile, leaf=leaf, engine=engine)
+    o_ref[...] = keys[None, :]
 
 
 def _merge_kv_batched_kernel(
@@ -290,6 +570,8 @@ def _merge_kv_batched_kernel(
     vo_ref,
     *,
     tile: int,
+    leaf: int,
+    engine: str,
     na: int,
     nb: int,
 ):
@@ -303,9 +585,12 @@ def _merge_kv_batched_kernel(
     wbv = bv_ref[bi, pl.ds(b0, tile)]
     valid_a = jnp.clip(na - a0, 0, tile)
     valid_b = jnp.clip(nb - b0, 0, tile)
-    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
-    ko_ref[...] = (_permute_select(ra, wak, tile) + _permute_select(rb, wbk, tile))[None, :]
-    vo_ref[...] = (_permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile))[None, :]
+    ko, vo = _tile_merge(
+        wak, wbk, tile=tile, leaf=leaf, engine=engine,
+        wav=wav, wbv=wbv, valid_a=valid_a, valid_b=valid_b,
+    )
+    ko_ref[...] = ko[None, :]
+    vo_ref[...] = vo[None, :]
 
 
 def _prepare_batched(a, b, tile):
@@ -333,7 +618,9 @@ def merge_batched_pallas(
     b: jax.Array,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Merge ``B`` pairs of sorted rows in one 2-D-grid SPM kernel launch.
 
@@ -352,10 +639,12 @@ def merge_batched_pallas(
         out_specs=pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
     )
     out = pl.pallas_call(
-        functools.partial(_merge_batched_kernel, tile=tile),
+        functools.partial(
+            _merge_batched_kernel, tile=tile, leaf=_norm_leaf(tile, leaf), engine=engine
+        ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, nt * tile), dtype),
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, ap, bp)
     return out[:, :n]
 
@@ -367,7 +656,9 @@ def merge_kv_batched_pallas(
     bv: jax.Array,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Batched stable key-value merge on the 2-D-grid SPM kernel.
 
@@ -394,14 +685,19 @@ def merge_kv_batched_pallas(
     )
     ko, vo = pl.pallas_call(
         functools.partial(
-            _merge_kv_batched_kernel, tile=tile, na=ak.shape[1], nb=bk.shape[1]
+            _merge_kv_batched_kernel,
+            tile=tile,
+            leaf=_norm_leaf(tile, leaf),
+            engine=engine,
+            na=ak.shape[1],
+            nb=bk.shape[1],
         ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((bsz, nt * tile), kd),
             jax.ShapeDtypeStruct((bsz, nt * tile), vd),
         ],
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, akp, avp, bkp, bvp)
     return ko[:, :n], vo[:, :n]
 
@@ -414,21 +710,12 @@ def merge_kv_batched_pallas(
 # (B, nt) start tables, the per-row valid lengths ride in as scalar-
 # prefetch operands (SMEM).  Each (batch, tile) grid step derives its
 # windows' valid prefixes from the length tables and uses the length-
-# masked Merge Matrix reduction, so padding never shadows a payload and
-# output slots past a row's merged length are filled with the sentinel.
-# The partition phase clamps every row's diagonals to that row's total
-# valid length, so short rows simply run out of work early (their
-# trailing tiles write pure sentinel blocks).
-
-
-def _permute_fill(rank: jax.Array, window: jax.Array, t: int) -> Tuple[jax.Array, jax.Array]:
-    """Like :func:`_permute_select`, but also returns per-slot coverage."""
-    k = jnp.arange(t, dtype=jnp.int32)
-    onehot = rank[:, None] == k[None, :]
-    zero = jnp.zeros((), window.dtype)
-    val = jnp.sum(jnp.where(onehot, window[:, None], zero), axis=0)
-    count = jnp.sum(onehot, axis=0, dtype=jnp.int32)
-    return val, count
+# masked rank form (at leaf scale for the hierarchical engine), so
+# padding never shadows a payload and output slots past a row's merged
+# length are filled with the sentinel.  The partition phase clamps every
+# row's diagonals to that row's total valid length, so short rows simply
+# run out of work early (their trailing tiles write pure sentinel
+# blocks).
 
 
 def _merge_batched_ragged_kernel(
@@ -441,6 +728,8 @@ def _merge_batched_ragged_kernel(
     o_ref,  # (1, T) VMEM output block
     *,
     tile: int,
+    leaf: int,
+    engine: str,
 ):
     bi = pl.program_id(0)
     ti = pl.program_id(1)
@@ -450,11 +739,11 @@ def _merge_batched_ragged_kernel(
     wb = b_ref[bi, pl.ds(b0, tile)]
     valid_a = jnp.clip(a_lens[bi] - a0, 0, tile)
     valid_b = jnp.clip(b_lens[bi] - b0, 0, tile)
-    ra, rb = _tile_ranks_masked(wa, wb, valid_a, valid_b)
-    va, ca = _permute_fill(ra, wa, tile)
-    vb, cb = _permute_fill(rb, wb, tile)
-    sent = max_sentinel(wa.dtype)
-    o_ref[...] = jnp.where(ca + cb > 0, va + vb, sent)[None, :]
+    keys, _ = _tile_merge(
+        wa, wb, tile=tile, leaf=leaf, engine=engine,
+        valid_a=valid_a, valid_b=valid_b, fill=True,
+    )
+    o_ref[...] = keys[None, :]
 
 
 def _merge_kv_batched_ragged_kernel(
@@ -470,6 +759,8 @@ def _merge_kv_batched_ragged_kernel(
     vo_ref,
     *,
     tile: int,
+    leaf: int,
+    engine: str,
 ):
     bi = pl.program_id(0)
     ti = pl.program_id(1)
@@ -481,13 +772,12 @@ def _merge_kv_batched_ragged_kernel(
     wbv = bv_ref[bi, pl.ds(b0, tile)]
     valid_a = jnp.clip(a_lens[bi] - a0, 0, tile)
     valid_b = jnp.clip(b_lens[bi] - b0, 0, tile)
-    ra, rb = _tile_ranks_masked(wak, wbk, valid_a, valid_b)
-    ka, ca = _permute_fill(ra, wak, tile)
-    kb, cb = _permute_fill(rb, wbk, tile)
-    sent = max_sentinel(wak.dtype)
-    ko_ref[...] = jnp.where(ca + cb > 0, ka + kb, sent)[None, :]
-    # uncovered value slots sum to zero already — the pad-value convention
-    vo_ref[...] = (_permute_select(ra, wav, tile) + _permute_select(rb, wbv, tile))[None, :]
+    ko, vo = _tile_merge(
+        wak, wbk, tile=tile, leaf=leaf, engine=engine,
+        wav=wav, wbv=wbv, valid_a=valid_a, valid_b=valid_b, fill=True,
+    )
+    ko_ref[...] = ko[None, :]
+    vo_ref[...] = vo[None, :]
 
 
 def _prepare_batched_ragged(a, b, a_lens, b_lens, tile):
@@ -526,7 +816,9 @@ def merge_batched_ragged_pallas(
     b_lens,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Ragged batched merge on the 2-D ``(batch, tile)`` grid SPM kernel.
 
@@ -549,10 +841,12 @@ def merge_batched_ragged_pallas(
         out_specs=pl.BlockSpec((1, tile), lambda bi, ti, *_: (bi, ti)),
     )
     out = pl.pallas_call(
-        functools.partial(_merge_batched_ragged_kernel, tile=tile),
+        functools.partial(
+            _merge_batched_ragged_kernel, tile=tile, leaf=_norm_leaf(tile, leaf), engine=engine
+        ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, nt * tile), dtype),
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, a_lens, b_lens, ap, bp)
     return out[:, :n]
 
@@ -566,7 +860,9 @@ def merge_kv_batched_ragged_pallas(
     b_lens,
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Ragged batched key-value merge on the 2-D-grid SPM kernel.
 
@@ -594,12 +890,210 @@ def merge_kv_batched_ragged_pallas(
         ],
     )
     ko, vo = pl.pallas_call(
-        functools.partial(_merge_kv_batched_ragged_kernel, tile=tile),
+        functools.partial(
+            _merge_kv_batched_ragged_kernel, tile=tile, leaf=_norm_leaf(tile, leaf), engine=engine
+        ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((bsz, nt * tile), kd),
             jax.ShapeDtypeStruct((bsz, nt * tile), vd),
         ],
-        interpret=interpret,
+        interpret=_interp(interpret),
     )(a_starts, b_starts, a_lens, b_lens, akp, avp, bkp, bvp)
     return ko[:, :n], vo[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Flat merge-sort rounds: the padded buffer lives across the whole sort
+# ---------------------------------------------------------------------------
+#
+# ``kernels.ops.sort``/``sort_kv`` used to re-concatenate a (rows, tile)
+# sentinel block onto BOTH run arrays every round (inside
+# ``_prepare_batched``) — 2 extra allocations plus a full copy of the
+# data per round.  The flat round kernel removes that: the sort keeps ONE
+# flat buffer of ``m + tile`` elements (``m`` = pow2-padded data, tail =
+# ``tile`` sentinels, built once per sort), run pairs are addressed by
+# *flat* offsets riding in as scalar-prefetch tables, and window overrun
+# into a neighboring run is excluded by the length-masked rank form
+# (valid counts derived in-kernel from the static run width) instead of
+# by padding.  The sentinel tail of the output buffer is re-written by
+# one dedicated trailing grid step, so the buffer never round-trips
+# through a host-side concatenate between rounds.
+
+
+def _sort_round_kernel(
+    fa,  # scalar prefetch (SMEM): (ntiles + 1,) flat A-window starts
+    fb,  # scalar prefetch (SMEM): (ntiles + 1,) flat B-window starts
+    x_ref,  # (m + tile,) flat keys, memory_space=ANY
+    o_ref,  # (tile,) VMEM output block
+    *,
+    width: int,
+    tile: int,
+    leaf: int,
+    engine: str,
+    tiles_per_pair: int,
+    n_data_tiles: int,
+):
+    s_id = pl.program_id(0)
+
+    @pl.when(s_id < n_data_tiles)
+    def _():
+        pair = s_id // tiles_per_pair
+        base = pair * (2 * width)
+        a0 = fa[s_id] - base
+        b0 = fb[s_id] - base - width
+        wa = x_ref[pl.ds(fa[s_id], tile)]
+        wb = x_ref[pl.ds(fb[s_id], tile)]
+        # masked ranks: overrun past a run's width reads the *neighbor*
+        # run (flat layout) — excluded by index, exactly like padding
+        valid_a = jnp.clip(width - a0, 0, tile)
+        valid_b = jnp.clip(width - b0, 0, tile)
+        keys, _ = _tile_merge(
+            wa, wb, tile=tile, leaf=leaf, engine=engine,
+            valid_a=valid_a, valid_b=valid_b,
+        )
+        o_ref[...] = keys
+
+    @pl.when(s_id >= n_data_tiles)
+    def _():
+        o_ref[...] = jnp.full((tile,), max_sentinel(x_ref.dtype), x_ref.dtype)
+
+
+def _sort_round_kv_kernel(
+    fa,
+    fb,
+    k_ref,
+    v_ref,
+    ko_ref,
+    vo_ref,
+    *,
+    width: int,
+    tile: int,
+    leaf: int,
+    engine: str,
+    tiles_per_pair: int,
+    n_data_tiles: int,
+):
+    s_id = pl.program_id(0)
+
+    @pl.when(s_id < n_data_tiles)
+    def _():
+        pair = s_id // tiles_per_pair
+        base = pair * (2 * width)
+        a0 = fa[s_id] - base
+        b0 = fb[s_id] - base - width
+        wak = k_ref[pl.ds(fa[s_id], tile)]
+        wbk = k_ref[pl.ds(fb[s_id], tile)]
+        wav = v_ref[pl.ds(fa[s_id], tile)]
+        wbv = v_ref[pl.ds(fb[s_id], tile)]
+        valid_a = jnp.clip(width - a0, 0, tile)
+        valid_b = jnp.clip(width - b0, 0, tile)
+        ko, vo = _tile_merge(
+            wak, wbk, tile=tile, leaf=leaf, engine=engine,
+            wav=wav, wbv=wbv, valid_a=valid_a, valid_b=valid_b,
+        )
+        ko_ref[...] = ko
+        vo_ref[...] = vo
+
+    @pl.when(s_id >= n_data_tiles)
+    def _():
+        ko_ref[...] = jnp.full((tile,), max_sentinel(k_ref.dtype), k_ref.dtype)
+        vo_ref[...] = jnp.zeros((tile,), v_ref.dtype)
+
+
+def _sort_round_starts(xf, m, width, tile):
+    """Flat scalar-prefetch tables for one sort round (plus the tail entry)."""
+    npairs = m // (2 * width)
+    tpp = (2 * width) // tile
+    runs = xf[:m].reshape(npairs, 2 * width)
+    diags = jnp.arange(tpp, dtype=jnp.int32) * tile
+    a0 = diagonal_intersections_batched(runs[:, :width], runs[:, width:], diags).astype(jnp.int32)
+    b0 = diags[None, :] - a0
+    base = (jnp.arange(npairs, dtype=jnp.int32) * (2 * width))[:, None]
+    fa = (base + a0).reshape(-1)
+    fb = (base + width + b0).reshape(-1)
+    # the sentinel-tail grid step still *addresses* the tables: give it a
+    # safe in-bounds entry
+    zero = jnp.zeros((1,), jnp.int32)
+    return jnp.concatenate([fa, zero]), jnp.concatenate([fb, zero]), npairs * tpp, tpp
+
+
+def sort_round_pallas(
+    xf: jax.Array,
+    width: int,
+    *,
+    tile: int = DEFAULT_TILE,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One bottom-up merge-sort round on the flat padded layout.
+
+    ``xf`` is ``(m + tile,)``: ``m`` (a power of two, a multiple of
+    ``2 * width``; ``tile`` must divide ``2 * width``) data elements
+    holding sorted runs of ``width``, then ``tile`` sentinels.  Returns
+    the same layout with runs of ``2 * width`` — call repeatedly to sort.
+    """
+    m = xf.shape[0] - tile
+    fa, fb, ndata, tpp = _sort_round_starts(xf, m, width, tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndata + 1,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((tile,), lambda s, *_: (s,)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _sort_round_kernel,
+            width=width,
+            tile=tile,
+            leaf=_norm_leaf(tile, leaf),
+            engine=engine,
+            tiles_per_pair=tpp,
+            n_data_tiles=ndata,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m + tile,), xf.dtype),
+        interpret=_interp(interpret),
+    )(fa, fb, xf)
+
+
+def sort_round_kv_pallas(
+    kf: jax.Array,
+    vf: jax.Array,
+    width: int,
+    *,
+    tile: int = DEFAULT_TILE,
+    leaf: int = DEFAULT_LEAF,
+    engine: str = DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Key-value :func:`sort_round_pallas` (values: zero-filled tail)."""
+    m = kf.shape[0] - tile
+    fa, fb, ndata, tpp = _sort_round_starts(kf, m, width, tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndata + 1,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 2,
+        out_specs=[
+            pl.BlockSpec((tile,), lambda s, *_: (s,)),
+            pl.BlockSpec((tile,), lambda s, *_: (s,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _sort_round_kv_kernel,
+            width=width,
+            tile=tile,
+            leaf=_norm_leaf(tile, leaf),
+            engine=engine,
+            tiles_per_pair=tpp,
+            n_data_tiles=ndata,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m + tile,), kf.dtype),
+            jax.ShapeDtypeStruct((m + tile,), vf.dtype),
+        ],
+        interpret=_interp(interpret),
+    )(fa, fb, kf, vf)

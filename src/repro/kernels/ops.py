@@ -3,17 +3,29 @@
 ``merge`` / ``merge_kv`` / ``sort`` / ``sort_kv`` dispatch to the Pallas
 SPM kernel when the problem is big enough to tile, and to the pure-JAX
 core otherwise.  ``merge_batched`` / ``merge_kv_batched`` are the batched
-(leading batch axis) forms on the 2-D ``(batch, tile)`` grid kernel —
-one launch for the whole batch; the sorts route their wide rounds
-through them so a sort round is a single kernel launch regardless of how
-many run pairs it merges.  ``interpret`` defaults to True because this
-build environment is CPU-only; on a real TPU pass ``interpret=False``.
+(leading batch axis) forms on the 2-D ``(batch, tile)`` grid kernel; the
+sorts (1-D and the new ``sort_batched`` / ``sort_kv_batched``) run their
+wide rounds on the **flat round kernel** — one launch per round, with the
+pow2 + sentinel padding hoisted out of the round loop (built once per
+sort; see ``repro.kernels.merge_path.sort_round_pallas``).
+
+**Tile/leaf selection**: every wrapper takes ``tile=None`` / ``leaf=None``
+and resolves them through :func:`repro.kernels.tune.pick` (the
+micro-bench table of the hierarchical tile engine), so consumers that
+don't care get measured defaults and consumers that do (serving sampler,
+MoE dispatch, distributed sort) can pass their own.
+
+**Interpret default**: ``interpret=None`` (the default everywhere)
+resolves to the module-level :data:`DEFAULT_INTERPRET`, which is ``True``
+(interpret mode) unless the ``REPRO_PALLAS_INTERPRET`` environment
+variable says otherwise — set ``REPRO_PALLAS_INTERPRET=0`` on a real TPU
+and every call site in the repo compiles, no call-site edits needed.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,73 +33,142 @@ import jax.numpy as jnp
 from repro.core import batched as _bat
 from repro.core import merge_path as _mp
 from . import merge_path as _kern
+from . import tune as _tune
+
+# single source of truth for the env-overridable interpret default — the
+# kernel wrappers, tune.autotune, and the benchmarks all resolve through
+# it (re-exported here because ops is the public dispatch surface)
+DEFAULT_INTERPRET: bool = _kern.DEFAULT_INTERPRET
+_interp = _kern._interp
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _resolve(n: int, dtype, tile: Optional[int], leaf: Optional[int]) -> Tuple[int, int]:
+    """Fill unspecified tile/leaf from the autotune table."""
+    t, s = _tune.pick(n, dtype)
+    tile = t if tile is None else tile
+    leaf = s if leaf is None else leaf
+    return tile, max(1, min(leaf, tile))
+
+
+def _sort_tile(n: int, dtype, tile: Optional[int], leaf: Optional[int]) -> Tuple[int, int]:
+    """Tile/leaf resolution for the sorts: the flat rounds need
+    ``tile | 2 * width`` with pow2 widths, so an explicitly passed tile
+    must be a power of two — reject it loudly rather than silently
+    running a different tile than the caller measured.  (The autotune
+    table only ever emits powers of two.)"""
+    tile, leaf = _resolve(n, dtype, tile, leaf)
+    if tile & (tile - 1):
+        raise ValueError(
+            f"sort tile must be a power of two (flat sort rounds require "
+            f"tile | 2 * width), got {tile}"
+        )
+    return tile, leaf
+
+
+_JIT = functools.partial(
+    jax.jit, static_argnames=("tile", "leaf", "engine", "interpret")
+)
+
+
+@_JIT
 def merge(
-    a: jax.Array, b: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Stable merge of two sorted 1-D arrays (Pallas SPM kernel)."""
-    if a.shape[0] + b.shape[0] <= tile:
+    n = a.shape[0] + b.shape[0]
+    tile, leaf = _resolve(n, jnp.result_type(a, b), tile, leaf)
+    if n <= tile:
         return _mp.merge(a, b)
-    return _kern.merge_pallas(a, b, tile=tile, interpret=interpret)
+    return _kern.merge_pallas(
+        a, b, tile=tile, leaf=leaf, engine=engine, interpret=_interp(interpret)
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def merge_kv(
     ak: jax.Array,
     av: jax.Array,
     bk: jax.Array,
     bv: jax.Array,
     *,
-    tile: int = _kern.DEFAULT_TILE,
-    interpret: bool = True,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Stable key-value merge (Pallas SPM kernel)."""
-    if ak.shape[0] + bk.shape[0] <= tile:
+    n = ak.shape[0] + bk.shape[0]
+    tile, leaf = _resolve(n, jnp.result_type(ak, bk), tile, leaf)
+    if n <= tile:
         return _mp.merge_kv(ak, av, bk, bv)
-    return _kern.merge_kv_pallas(ak, av, bk, bv, tile=tile, interpret=interpret)
+    return _kern.merge_kv_pallas(
+        ak, av, bk, bv, tile=tile, leaf=leaf, engine=engine, interpret=_interp(interpret)
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def merge_batched(
-    a: jax.Array, b: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Stable merge of ``B`` row pairs: ``(B, na) + (B, nb) -> (B, na+nb)``.
 
     One 2-D-grid kernel launch for the whole batch when rows are wide
     enough to tile; the fused pure-JAX batched merge otherwise.
     """
-    if a.shape[1] + b.shape[1] <= tile:
+    n = a.shape[1] + b.shape[1]
+    tile, leaf = _resolve(n, jnp.result_type(a, b), tile, leaf)
+    if n <= tile:
         return _bat.merge_batched(a, b)
-    return _kern.merge_batched_pallas(a, b, tile=tile, interpret=interpret)
+    return _kern.merge_batched_pallas(
+        a, b, tile=tile, leaf=leaf, engine=engine, interpret=_interp(interpret)
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def merge_kv_batched(
     ak: jax.Array,
     av: jax.Array,
     bk: jax.Array,
     bv: jax.Array,
     *,
-    tile: int = _kern.DEFAULT_TILE,
-    interpret: bool = True,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Stable batched key-value merge (2-D-grid Pallas kernel when wide)."""
-    if ak.shape[1] + bk.shape[1] <= tile:
+    n = ak.shape[1] + bk.shape[1]
+    tile, leaf = _resolve(n, jnp.result_type(ak, bk), tile, leaf)
+    if n <= tile:
         return _bat.merge_kv_batched(ak, av, bk, bv)
-    return _kern.merge_kv_batched_pallas(ak, av, bk, bv, tile=tile, interpret=interpret)
+    return _kern.merge_kv_batched_pallas(
+        ak, av, bk, bv, tile=tile, leaf=leaf, engine=engine, interpret=_interp(interpret)
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def merge_batched_ragged(
     a: jax.Array,
     b: jax.Array,
     a_lens: jax.Array,
     b_lens: jax.Array,
     *,
-    tile: int = _kern.DEFAULT_TILE,
-    interpret: bool = True,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Ragged batched merge: per-row valid lengths, sentinel-padded tails.
 
@@ -95,14 +176,17 @@ def merge_batched_ragged(
     for narrow rows, the 2-D-grid ragged kernel (lengths via scalar
     prefetch) when rows are wide enough to tile.
     """
-    if a.shape[1] + b.shape[1] <= tile:
+    n = a.shape[1] + b.shape[1]
+    tile, leaf = _resolve(n, jnp.result_type(a, b), tile, leaf)
+    if n <= tile:
         return _bat.merge_batched_ragged(a, b, a_lens, b_lens)
     return _kern.merge_batched_ragged_pallas(
-        a, b, a_lens, b_lens, tile=tile, interpret=interpret
+        a, b, a_lens, b_lens, tile=tile, leaf=leaf, engine=engine,
+        interpret=_interp(interpret),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def merge_kv_batched_ragged(
     ak: jax.Array,
     av: jax.Array,
@@ -111,68 +195,235 @@ def merge_kv_batched_ragged(
     a_lens: jax.Array,
     b_lens: jax.Array,
     *,
-    tile: int = _kern.DEFAULT_TILE,
-    interpret: bool = True,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Ragged batched key-value merge (2-D-grid ragged kernel when wide)."""
-    if ak.shape[1] + bk.shape[1] <= tile:
+    n = ak.shape[1] + bk.shape[1]
+    tile, leaf = _resolve(n, jnp.result_type(ak, bk), tile, leaf)
+    if n <= tile:
         return _bat.merge_kv_batched_ragged(ak, av, bk, bv, a_lens, b_lens)
     return _kern.merge_kv_batched_ragged_pallas(
-        ak, av, bk, bv, a_lens, b_lens, tile=tile, interpret=interpret
+        ak, av, bk, bv, a_lens, b_lens, tile=tile, leaf=leaf, engine=engine,
+        interpret=_interp(interpret),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def sort(x: jax.Array, *, tile: int = _kern.DEFAULT_TILE, interpret: bool = True) -> jax.Array:
-    """Bottom-up merge sort whose wide rounds run on the batched Pallas kernel.
+# ---------------------------------------------------------------------------
+# Sorts: flat rounds, padding hoisted out of the loop
+# ---------------------------------------------------------------------------
+
+
+def _sort_rounds(flat: jax.Array, m: int, tile: int, leaf: int, engine: str, interpret: bool) -> jax.Array:
+    """Bottom-up merge-sort rounds over a flat ``(B * m,)`` buffer of
+    width-1 runs (``m`` = per-row pow2 width; pairs never straddle a row
+    because ``m`` is a multiple of every round width).
+
+    Narrow rounds (``2 * width <= tile``) are fused pure-JAX batched
+    merges on reshaped views; wide rounds are flat-kernel launches
+    sharing ONE sentinel tail appended here, once — the padding hoist
+    that used to happen per round inside ``_prepare_batched``.
+    """
+    width = 1
+    while width < m and 2 * width <= tile:
+        runs = flat.reshape(-1, 2, width)
+        flat = _bat.merge_batched(runs[:, 0], runs[:, 1]).reshape(-1)
+        width *= 2
+    if width < m:
+        total = flat.shape[0]
+        xf = jnp.concatenate(
+            [flat, jnp.full((tile,), _mp.max_sentinel(flat.dtype), flat.dtype)]
+        )
+        while width < m:
+            xf = _kern.sort_round_pallas(
+                xf, width, tile=tile, leaf=leaf, engine=engine, interpret=interpret
+            )
+            width *= 2
+        flat = xf[:total]
+    return flat
+
+
+def _sort_rounds_kv(
+    kflat: jax.Array, vflat: jax.Array, m: int, tile: int, leaf: int, engine: str, interpret: bool
+) -> Tuple[jax.Array, jax.Array]:
+    """Key-value :func:`_sort_rounds` (values' hoisted tail is zeros)."""
+    width = 1
+    while width < m and 2 * width <= tile:
+        kr = kflat.reshape(-1, 2, width)
+        vr = vflat.reshape(-1, 2, width)
+        kflat, vflat = _bat.merge_kv_batched(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
+        kflat, vflat = kflat.reshape(-1), vflat.reshape(-1)
+        width *= 2
+    if width < m:
+        total = kflat.shape[0]
+        kf = jnp.concatenate(
+            [kflat, jnp.full((tile,), _mp.max_sentinel(kflat.dtype), kflat.dtype)]
+        )
+        vf = jnp.concatenate([vflat, jnp.zeros((tile,), vflat.dtype)])
+        while width < m:
+            kf, vf = _kern.sort_round_kv_pallas(
+                kf, vf, width, tile=tile, leaf=leaf, engine=engine, interpret=interpret
+            )
+            width *= 2
+        kflat, vflat = kf[:total], vf[:total]
+    return kflat, vflat
+
+
+@_JIT
+def sort(
+    x: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Bottom-up merge sort whose wide rounds run on the flat round kernel.
 
     Every round is ONE call: narrow rounds (2*width <= tile) use the fused
-    pure-JAX batched merge, wide rounds the 2-D ``(pairs, tile)`` grid
-    kernel — no Python-level loop over run pairs.
+    pure-JAX batched merge, wide rounds the flat ``(pair, tile)`` kernel —
+    no Python-level loop over run pairs, and the pow2 + sentinel padding
+    is built once per sort, not re-appended every round.
     """
     n = x.shape[0]
     if n <= 1:
         return x
+    tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
     xp = _mp._pad_pow2(x, _mp.max_sentinel(x.dtype))
-    m = xp.shape[0]
-    width = 1
-    while width < m:
-        runs = xp.reshape(-1, 2, width)
-        if 2 * width <= tile:
-            xp = _bat.merge_batched(runs[:, 0], runs[:, 1]).reshape(-1)
-        else:
-            xp = _kern.merge_batched_pallas(
-                runs[:, 0], runs[:, 1], tile=tile, interpret=interpret
-            ).reshape(-1)
-        width *= 2
-    return xp[:n]
+    out = _sort_rounds(xp, xp.shape[0], tile, leaf, engine, _interp(interpret))
+    return out[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@_JIT
 def sort_kv(
     keys: jax.Array,
     values: jax.Array,
     *,
-    tile: int = _kern.DEFAULT_TILE,
-    interpret: bool = True,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Stable key-value merge sort; wide rounds on the batched Pallas kernel."""
+    """Stable key-value merge sort; wide rounds on the flat round kernel."""
     n = keys.shape[0]
     if n <= 1:
         return keys, values
+    tile, leaf = _sort_tile(n, keys.dtype, tile, leaf)
     kp = _mp._pad_pow2(keys, _mp.max_sentinel(keys.dtype))
     vp = _mp._pad_pow2(values, jnp.zeros((), values.dtype))
-    m = kp.shape[0]
-    width = 1
-    while width < m:
-        kr = kp.reshape(-1, 2, width)
-        vr = vp.reshape(-1, 2, width)
-        if 2 * width <= tile:
-            kp, vp = _bat.merge_kv_batched(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
-        else:
-            kp, vp = _kern.merge_kv_batched_pallas(
-                kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1], tile=tile, interpret=interpret
-            )
-        kp, vp = kp.reshape(-1), vp.reshape(-1)
-        width *= 2
-    return kp[:n], vp[:n]
+    ks, vs = _sort_rounds_kv(kp, vp, kp.shape[0], tile, leaf, engine, _interp(interpret))
+    return ks[:n], vs[:n]
+
+
+@_JIT
+def sort_batched(
+    x: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Sort every row of ``(B, n)`` ascending; rows ride the same flat
+    rounds as :func:`sort` (the batch axis is folded into the run-pair
+    axis, so per-round launch count is independent of ``B``)."""
+    bsz, n = x.shape
+    if n <= 1:
+        return x
+    tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
+    xp = _bat._pad_rows_pow2(x, _mp.max_sentinel(x.dtype))
+    m = xp.shape[1]
+    out = _sort_rounds(xp.reshape(-1), m, tile, leaf, engine, _interp(interpret))
+    return out.reshape(bsz, m)[:, :n]
+
+
+@_JIT
+def sort_kv_batched(
+    keys: jax.Array,
+    values: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise stable key-value sort of ``(B, n)`` keys (ascending),
+    kernel-backed like :func:`sort_batched`."""
+    bsz, n = keys.shape
+    if n <= 1:
+        return keys, values
+    tile, leaf = _sort_tile(n, keys.dtype, tile, leaf)
+    kp = _bat._pad_rows_pow2(keys, _mp.max_sentinel(keys.dtype))
+    vp = _bat._pad_rows_pow2(values, jnp.zeros((), values.dtype))
+    m = kp.shape[1]
+    ks, vs = _sort_rounds_kv(
+        kp.reshape(-1), vp.reshape(-1), m, tile, leaf, engine, _interp(interpret)
+    )
+    return ks.reshape(bsz, m)[:, :n], vs.reshape(bsz, m)[:, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile", "leaf", "engine", "interpret")
+)
+def topk_batched(
+    x: jax.Array,
+    k: int,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise descending top-k on the kernel-backed batched kv-sort.
+
+    Same contract as :func:`repro.core.batched.topk_batched` (stable,
+    ``lax.top_k`` tie-breaking, exact at ``iinfo.min`` via
+    ``flip_desc``), but the sort rounds run on the flat round kernel
+    with tuned ``(tile, leaf)`` — the serving sampler's wide-vocab path.
+    """
+    bsz, n = x.shape
+    k = min(k, n)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+    _, perm = sort_kv_batched(
+        _mp.flip_desc(x), idx, tile=tile, leaf=leaf, engine=engine, interpret=interpret
+    )
+    top_idx = perm[:, :k]
+    return jnp.take_along_axis(x, top_idx, axis=1), top_idx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tile", "leaf", "engine", "interpret")
+)
+def topk_batched_ragged(
+    x: jax.Array,
+    k: int,
+    lens: jax.Array,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ragged row-wise descending top-k, kernel-backed.
+
+    Contract matches :func:`repro.core.batched.topk_batched_ragged`
+    exactly (masked slots: index ``-1``, dtype-min value); the underlying
+    sort is the same sentinel-mask-then-sort reduction the core ragged
+    kv-sort uses, so padded rows are bit-identical to their truncations.
+    """
+    bsz, n = x.shape
+    k = min(k, n)
+    lens = _bat._as_lens(lens, bsz, n)
+    keys = _bat._mask_rows(_mp.flip_desc(x), lens, _mp.max_sentinel(x.dtype))
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+    _, perm = sort_kv_batched(
+        keys, idx, tile=tile, leaf=leaf, engine=engine, interpret=interpret
+    )
+    top_idx = perm[:, :k]
+    vals = jnp.take_along_axis(x, top_idx, axis=1)
+    slot_valid = jnp.arange(k, dtype=jnp.int32)[None, :] < lens[:, None]
+    vals = jnp.where(slot_valid, vals, _mp.min_sentinel(x.dtype))
+    top_idx = jnp.where(slot_valid, top_idx, -1)
+    return vals, top_idx

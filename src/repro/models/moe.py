@@ -32,10 +32,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import (
+    max_sentinel,
     merge_sort_kv_batched,
     merge_sort_kv_batched_ragged,
     searchsorted_batched,
 )
+from repro.core.batched import _mask_rows
 from repro.parallel.sharding import constrain
 from .layers import dense_init, mlp_apply, mlp_init, _act
 
@@ -60,7 +62,10 @@ def capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
 
 
 def _positions_merge_path_batched(
-    flat_expert: jax.Array, e: int, slot_lens: jax.Array | None = None
+    flat_expert: jax.Array,
+    e: int,
+    slot_lens: jax.Array | None = None,
+    backend: str = "core",
 ) -> jax.Array:
     """Merge-path dispatch for the whole batch: position-in-expert per slot.
 
@@ -81,10 +86,24 @@ def _positions_merge_path_batched(
     position it would have in an unpadded batch.  Masked slots report
     an over-capacity position, so the usual ``pos < capacity``
     test drops them with no extra mask.
+
+    ``backend="pallas"`` (``moe_dispatch="merge_path_pallas"``) routes the
+    routing sort through the hierarchical tile engine
+    (``repro.kernels.ops.sort_kv_batched``, autotuned ``(tile, leaf)``)
+    — same stable-sort contract, wide rows ride the flat round kernel.
+    The ragged form masks the expert keys to the sentinel first, exactly
+    the reduction ``merge_sort_kv_batched_ragged`` applies internally.
     """
     b, n = flat_expert.shape
     slots = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
-    if slot_lens is None:
+    if backend == "pallas":
+        from repro.kernels import ops as kops  # deferred: kernels layer is optional here
+
+        keys = flat_expert
+        if slot_lens is not None:
+            keys = _mask_rows(keys, slot_lens, max_sentinel(keys.dtype))
+        sorted_e, sorted_slot = kops.sort_kv_batched(keys, slots)  # stable
+    elif slot_lens is None:
         sorted_e, sorted_slot = merge_sort_kv_batched(flat_expert, slots)  # stable
     else:
         sorted_e, sorted_slot = merge_sort_kv_batched_ragged(
@@ -151,8 +170,9 @@ def moe_apply(
     if token_counts is not None:
         # slots are token-major, so valid slots form the prefix tokens*k
         slot_lens = jnp.clip(jnp.asarray(token_counts, jnp.int32), 0, s) * k
-    if cfg.moe_dispatch == "merge_path":
-        pos = _positions_merge_path_batched(flat_e, e, slot_lens)  # (B, S*k)
+    if cfg.moe_dispatch in ("merge_path", "merge_path_pallas"):
+        backend = "pallas" if cfg.moe_dispatch == "merge_path_pallas" else "core"
+        pos = _positions_merge_path_batched(flat_e, e, slot_lens, backend)  # (B, S*k)
     else:
         pos = jax.vmap(lambda fe: _positions_cumsum(fe, e))(flat_e)
         if slot_lens is not None:

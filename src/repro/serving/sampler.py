@@ -27,6 +27,14 @@ out-of-band marker the ragged top-k uses.  Callers must treat negative
 token ids as "no token" (never feed them to a gather, where JAX's
 negative indexing would silently wrap to the last vocab entry).  Rows
 with ``vocab_lens[r] >= 1`` always return a valid in-prefix id.
+
+**Backend** (``backend="pallas"``): the candidate sort runs on the
+hierarchical tile engine (``repro.kernels.ops.topk_batched{,_ragged}``)
+instead of the fused pure-JAX path — same stable contract and the same
+ragged semantics, with ``(tile, leaf)`` either passed explicitly or
+resolved from the autotune table (``repro.kernels.tune``).  Production
+vocab widths (32K-256K) sit squarely in the regime where the kernel's
+flat sort rounds win.
 """
 
 from __future__ import annotations
@@ -44,9 +52,20 @@ def greedy(logits: jax.Array) -> jax.Array:
 
 
 def _topk_candidates(
-    logits: jax.Array, k: int, vocab_lens
+    logits: jax.Array,
+    k: int,
+    vocab_lens,
+    backend: str = "core",
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-row top-k candidates, optionally over a ragged valid-vocab prefix."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops  # deferred: kernels layer optional here
+
+        if vocab_lens is None:
+            return kops.topk_batched(logits, k, tile=tile, leaf=leaf)
+        return kops.topk_batched_ragged(logits, k, vocab_lens, tile=tile, leaf=leaf)
     if vocab_lens is None:
         return topk_batched(logits, k)
     return topk_batched_ragged(logits, k, vocab_lens)
@@ -58,8 +77,11 @@ def topk_sample(
     k: int = 40,
     temperature: float = 1.0,
     vocab_lens=None,  # optional (B,) or scalar: valid vocab prefix per row
+    backend: str = "core",  # "core" | "pallas" (hierarchical tile engine)
+    tile: Optional[int] = None,  # kernel tile override (None = autotuned)
+    leaf: Optional[int] = None,  # kernel leaf override (None = autotuned)
 ) -> jax.Array:
-    vals, idx = _topk_candidates(logits, k, vocab_lens)
+    vals, idx = _topk_candidates(logits, k, vocab_lens, backend, tile, leaf)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     loglik = jnp.log(jnp.maximum(probs, 1e-30))
     # masked-vocab slots are -inf, not floor-probability: they can never be
@@ -76,9 +98,12 @@ def topp_sample(
     k_max: int = 128,
     temperature: float = 1.0,
     vocab_lens=None,
+    backend: str = "core",  # "core" | "pallas" (hierarchical tile engine)
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
 ) -> jax.Array:
     """Nucleus sampling over the merge-path-sorted top-k_max candidates."""
-    vals, idx = _topk_candidates(logits, k_max, vocab_lens)
+    vals, idx = _topk_candidates(logits, k_max, vocab_lens, backend, tile, leaf)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     probs = jnp.where(idx >= 0, probs, 0.0)
     cum = jnp.cumsum(probs, axis=-1)
