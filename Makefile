@@ -4,17 +4,23 @@
 PY ?= python
 
 # perf-trajectory point written by `make ci` (bump per PR: BENCH_2, BENCH_3, ...)
-BENCH_JSON ?= BENCH_3.json
+BENCH_JSON ?= BENCH_5.json
 
-.PHONY: test bench-smoke bench lint ci
+.PHONY: test bench-smoke bench lint ci docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# full CI: tier-1 tests + smoke benchmarks, recording the perf point that
-# future PRs regress against (uniform batched anchor + ragged relative cost)
-ci: test
+# docs coverage gate: every public repro.core / repro.kernels.ops symbol
+# must appear in docs/architecture.md
+docs-check:
+	PYTHONPATH=src $(PY) tools/docs_check.py
+
+# full CI: tier-1 tests + docs gate + smoke benchmarks, recording the perf
+# point that future PRs regress against (batched anchor, tile engine,
+# distributed gather-vs-window bytes)
+ci: test docs-check
 	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
 
 # fast benchmark sweep (<60 s): small sizes of every paper benchmark

@@ -36,6 +36,7 @@ def main() -> None:
         bench_segmented_vs_regular,
         bench_sort,
     )
+    from benchmarks.bench_distributed import bench_distributed
     from benchmarks.bench_tile_engine import bench_tile_engine
 
     rows = []
@@ -43,6 +44,7 @@ def main() -> None:
     for bench in (
         bench_merge_throughput,
         bench_tile_engine,
+        bench_distributed,
         bench_batched_merge,
         bench_ragged_merge,
         bench_partition_cost,

@@ -67,6 +67,7 @@ __all__ = [
     "topk_batched_ragged",
     "merge_k",
     "merge_k_kv",
+    "merge_k_onepass",
     "merge_sort_k",
 ]
 
@@ -594,9 +595,10 @@ def merge_k(runs, lens=None) -> jax.Array:
     lower-indexed run (tournament rounds always merge lower-index runs as
     the A side).  Output: all valid elements merged, then sentinel
     padding; when the total true length is static (list input, or no
-    ``lens``) the padding is trimmed off.  Valid lengths ride through
-    every round, so payloads equal to the sentinel are merged exactly
-    (no strictly-below-sentinel caveat).
+    ``lens``) the padding is trimmed off, otherwise the row is exactly
+    ``(k * n,)`` wide.  Valid lengths ride through every round, so
+    payloads equal to the sentinel are merged exactly (no
+    strictly-below-sentinel caveat).
     """
     stacked, run_lens, static_total = _stack_runs(runs, lens)
     if static_total is None:
@@ -604,7 +606,7 @@ def merge_k(runs, lens=None) -> jax.Array:
         # output contract (valid prefix, then sentinel) holds even for the
         # k == 1 identity, which runs no merge round
         stacked = _mask_rows(stacked, run_lens, max_sentinel(stacked.dtype))
-    k = stacked.shape[0]
+    k, n = stacked.shape
     target = 1 << max(0, (k - 1).bit_length())
     if target != k:
         pad = jnp.full((target - k, stacked.shape[1]), max_sentinel(stacked.dtype), stacked.dtype)
@@ -615,7 +617,8 @@ def merge_k(runs, lens=None) -> jax.Array:
             stacked[0::2], stacked[1::2], run_lens[0::2], run_lens[1::2]
         )
         run_lens = run_lens[0::2] + run_lens[1::2]
-    out = stacked[0]
+    # pow2 pad rows only contribute trailing sentinels: (k * n,) is enough
+    out = stacked[0][: k * n]
     return out if static_total is None else out[:static_total]
 
 
@@ -626,7 +629,8 @@ def merge_k_kv(key_runs, value_runs, lens=None) -> Tuple[jax.Array, jax.Array]:
     sequences of matching 1-D runs; ``lens`` optionally gives per-run
     valid lengths for a stacked array.  Stable with lower-run priority,
     like :func:`merge_k`.  Output: merged valid pairs first, then
-    sentinel keys with zero values (trimmed when the total is static).
+    sentinel keys with zero values (trimmed when the total is static,
+    ``(k * n,)`` wide otherwise).
     Lengths (not sentinel comparisons) exclude the padding, so payload
     keys equal to the sentinel keep their values — the failure mode of
     the pre-ragged tournament.
@@ -651,7 +655,7 @@ def merge_k_kv(key_runs, value_runs, lens=None) -> Tuple[jax.Array, jax.Array]:
         # sentinel-keys / zero-values output contract
         kstack = _mask_rows(kstack, run_lens, max_sentinel(kstack.dtype))
         vstack = _mask_rows(vstack, run_lens, jnp.zeros((), vstack.dtype))
-    k = kstack.shape[0]
+    k, n = kstack.shape
     target = 1 << max(0, (k - 1).bit_length())
     if target != k:
         kpad = jnp.full((target - k, kstack.shape[1]), max_sentinel(kstack.dtype), kstack.dtype)
@@ -666,8 +670,55 @@ def merge_k_kv(key_runs, value_runs, lens=None) -> Tuple[jax.Array, jax.Array]:
         )
         run_lens = run_lens[0::2] + run_lens[1::2]
     if static_total is None:
-        return kstack[0], vstack[0]
+        # pow2 pad rows only contribute trailing sentinel/zero pairs
+        return kstack[0][: k * n], vstack[0][: k * n]
     return kstack[0][:static_total], vstack[0][:static_total]
+
+
+def merge_k_onepass(runs, lens=None) -> jax.Array:
+    """Merge ``k`` sorted runs in ONE multiway co-rank pass — no rounds.
+
+    Same contract as :func:`merge_k` (stable with lower-run priority;
+    ragged ``lens`` supported; output is the merged valid prefix followed
+    by sentinel padding, trimmed when the total is static), but instead of
+    ``ceil(log2 k)`` tournament rounds that rewrite the data every round,
+    each element's final output position is computed directly: its own
+    index plus, for every other run, the count of that run's valid
+    elements preceding it — ``side="right"`` against lower-indexed runs
+    (their ties come first) and ``side="left"`` against higher-indexed
+    runs (our ties come first).  That is Siebert & Träff's stable multiway
+    co-rank partition (PAPERS.md): ``O(k²)`` rank searches but a *single*
+    scatter pass over the data, the right trade when runs are long and
+    ``k`` is a mesh-sized constant — this is ``distributed_sort``'s
+    default bucket combine (``combine="onepass"``).
+
+    Length-capped counts exclude padding by *count*, never by comparing
+    against the sentinel, so payloads equal to the sentinel merge exactly
+    (the same guarantee as the ragged tournament).
+    """
+    stacked, run_lens, static_total = _stack_runs(runs, lens)
+    k, n = stacked.shape
+    sent = max_sentinel(stacked.dtype)
+    sm = _mask_rows(stacked, run_lens, sent)
+    if k == 1:
+        out = sm[0] if static_total is None else stacked[0][:static_total]
+        return out
+    total = k * n
+    out = jnp.full((total,), sent, stacked.dtype)
+    t = jnp.arange(n, dtype=jnp.int32)
+    jidx = jnp.arange(k, dtype=jnp.int32)[:, None]
+    for j in range(k):
+        q = jnp.broadcast_to(sm[j][None, :], (k, n))
+        # counts of each run's elements preceding run j's elements; capped
+        # at the run's valid length so pads are excluded by count
+        cl = jnp.minimum(searchsorted_batched(sm, q, side="left"), run_lens[:, None])
+        cr = jnp.minimum(searchsorted_batched(sm, q, side="right"), run_lens[:, None])
+        cross = jnp.where(jidx < j, cr, cl)
+        cross = jnp.where(jidx == j, 0, cross)
+        rank = t + jnp.sum(cross, axis=0)
+        rank = jnp.where(t < run_lens[j], rank, total)  # pads drop
+        out = out.at[rank].set(sm[j], mode="drop")
+    return out if static_total is None else out[:static_total]
 
 
 def _merge_k_groups(runs: jax.Array) -> jax.Array:

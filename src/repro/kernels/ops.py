@@ -364,6 +364,58 @@ def sort_kv_batched(
     return ks.reshape(bsz, m)[:, :n], vs.reshape(bsz, m)[:, :n]
 
 
+def merge_k(
+    runs: jax.Array,
+    lens: Optional[jax.Array] = None,
+    *,
+    tile: Optional[int] = None,
+    leaf: Optional[int] = None,
+    engine: str = _kern.DEFAULT_ENGINE,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """k-way tournament merge whose rounds run on the ragged batched kernel.
+
+    Same contract as :func:`repro.core.batched.merge_k` restricted to a
+    stacked ``(k, n)`` runs array (stable with lower-run priority; ``lens``
+    optionally gives per-run valid lengths; output is always the
+    ``(k * n,)`` merged valid prefix followed by sentinel padding — a
+    traced ``lens`` forbids trimming further).  Each of the
+    ``ceil(log2 k)`` tournament rounds is one :func:`merge_batched_ragged`
+    call, i.e. the hierarchical tile engine once the runs are wide enough
+    to tile — this is ``distributed_sort``'s bucket combine for
+    ``local_sort="pallas", combine="tournament"``.
+    """
+    runs = jnp.asarray(runs)
+    if runs.ndim != 2:
+        raise ValueError(f"expected (k, n) runs, got shape {runs.shape}")
+    k, n = runs.shape
+    sent = _mp.max_sentinel(runs.dtype)
+    run_lens = (
+        jnp.full((k,), n, jnp.int32) if lens is None else _bat._as_lens(lens, k, n)
+    )
+    stacked = _bat._mask_rows(runs, run_lens, sent)
+    target = 1 << max(0, (k - 1).bit_length())
+    if target != k:
+        pad = jnp.full((target - k, n), sent, stacked.dtype)
+        stacked = jnp.concatenate([stacked, pad], axis=0)
+        run_lens = jnp.concatenate([run_lens, jnp.zeros((target - k,), jnp.int32)])
+    while stacked.shape[0] > 1:
+        stacked = merge_batched_ragged(
+            stacked[0::2],
+            stacked[1::2],
+            run_lens[0::2],
+            run_lens[1::2],
+            tile=tile,
+            leaf=leaf,
+            engine=engine,
+            interpret=interpret,
+        )
+        run_lens = run_lens[0::2] + run_lens[1::2]
+    # pow2 pad rows only ever append sentinels, so the (k * n,) prefix
+    # holds every valid element — same output width as the core forms
+    return stacked[0][: k * n]
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "tile", "leaf", "engine", "interpret")
 )

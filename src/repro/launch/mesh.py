@@ -33,6 +33,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     )
 
 
+def make_flat_mesh(p: int | None = None, axis: str = "x"):
+    """1-D mesh over the first ``p`` visible devices (all of them if None).
+
+    The mesh the distributed Merge Path primitives
+    (``repro.core.distributed_*``) expect: one named axis, contiguous
+    shards.  Benchmarks and the multi-device tests use it with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get a forced
+    8-device host mesh; on real hardware it spans the ICI ring.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if p is None:
+        p = len(devs)
+    if len(devs) < p:
+        raise RuntimeError(f"need {p} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:p]), (axis,))
+
+
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for multi-device CPU tests (8 fake devices)."""
     import jax

@@ -4,9 +4,11 @@
 (``repro.core.topk_batched``): all batch rows ride one fused kv-sort —
 every diagonal binary search of every row's merge rounds shares a single
 vectorized Algorithm 2 pass — instead of a vmapped per-row sort.  On a
-vocab-sharded mesh the serving engine swaps in
-``repro.core.distributed_topk`` whose combine step is a tree of
-merge-path merges (see core/distributed.py).
+vocab-sharded mesh, ``backend="distributed"`` routes the candidate step
+through ``repro.core.distributed_topk_batched``: per-shard batched top-k,
+then a butterfly (or gather) merge-path combine that replicates the
+global ``(B, k)`` candidates — ``k * log2(P)`` candidates moved per
+device instead of the whole vocab (see core/distributed.py).
 
 **Masked vocab** (``vocab_lens``): serving vocabularies are padded to
 lane-friendly widths, so only a prefix of every logit row is real.
@@ -58,8 +60,19 @@ def _topk_candidates(
     backend: str = "core",
     tile: Optional[int] = None,
     leaf: Optional[int] = None,
+    mesh=None,
+    axis: str = "x",
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-row top-k candidates, optionally over a ragged valid-vocab prefix."""
+    if backend == "distributed":
+        from repro.core import distributed_topk_batched  # deferred: mesh layer optional
+
+        if vocab_lens is not None:
+            raise ValueError(
+                "vocab_lens is not supported with backend='distributed' — pad "
+                "the sharded vocab with -inf ban logits instead"
+            )
+        return distributed_topk_batched(logits, k, mesh=mesh, axis=axis)
     if backend == "pallas":
         from repro.kernels import ops as kops  # deferred: kernels layer optional here
 
@@ -77,11 +90,13 @@ def topk_sample(
     k: int = 40,
     temperature: float = 1.0,
     vocab_lens=None,  # optional (B,) or scalar: valid vocab prefix per row
-    backend: str = "core",  # "core" | "pallas" (hierarchical tile engine)
+    backend: str = "core",  # "core" | "pallas" | "distributed" (vocab-sharded)
     tile: Optional[int] = None,  # kernel tile override (None = autotuned)
     leaf: Optional[int] = None,  # kernel leaf override (None = autotuned)
+    mesh=None,  # backend="distributed": mesh whose `axis` shards the vocab
+    axis: str = "x",
 ) -> jax.Array:
-    vals, idx = _topk_candidates(logits, k, vocab_lens, backend, tile, leaf)
+    vals, idx = _topk_candidates(logits, k, vocab_lens, backend, tile, leaf, mesh, axis)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     loglik = jnp.log(jnp.maximum(probs, 1e-30))
     # masked-vocab slots are -inf, not floor-probability: they can never be
@@ -98,12 +113,14 @@ def topp_sample(
     k_max: int = 128,
     temperature: float = 1.0,
     vocab_lens=None,
-    backend: str = "core",  # "core" | "pallas" (hierarchical tile engine)
+    backend: str = "core",  # "core" | "pallas" | "distributed" (vocab-sharded)
     tile: Optional[int] = None,
     leaf: Optional[int] = None,
+    mesh=None,  # backend="distributed": mesh whose `axis` shards the vocab
+    axis: str = "x",
 ) -> jax.Array:
     """Nucleus sampling over the merge-path-sorted top-k_max candidates."""
-    vals, idx = _topk_candidates(logits, k_max, vocab_lens, backend, tile, leaf)
+    vals, idx = _topk_candidates(logits, k_max, vocab_lens, backend, tile, leaf, mesh, axis)
     probs = jax.nn.softmax(vals.astype(jnp.float32) / jnp.maximum(temperature, 1e-6), axis=-1)
     probs = jnp.where(idx >= 0, probs, 0.0)
     cum = jnp.cumsum(probs, axis=-1)

@@ -1,0 +1,69 @@
+"""Fail if any public API symbol is missing from docs/architecture.md.
+
+Public surface checked:
+
+* every name in ``repro.core.__all__`` (the library's primary boundary);
+* every public function defined in ``repro.kernels.ops`` (the kernel
+  dispatch surface), plus its documented module-level switches.
+
+Wired to ``make docs-check`` (and ``make ci``), so a PR that adds a public
+symbol without documenting it in the architecture page fails CI.  The
+check requires each symbol as a whole word (word-boundary regex, so
+``merge`` is not satisfied by ``merge_batched``) — the "Public API index"
+section lists every symbol by name.
+"""
+
+from __future__ import annotations
+
+import inspect
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DOC = os.path.join(ROOT, "docs", "architecture.md")
+
+
+def public_symbols() -> dict:
+    """Map of ``module -> sorted public symbol names`` to require."""
+    import repro.core as core
+    import repro.kernels.ops as ops
+
+    ops_names = sorted(
+        name
+        for name, obj in vars(ops).items()
+        if not name.startswith("_")
+        and inspect.isfunction(obj)
+        and obj.__module__ == "repro.kernels.ops"
+    )
+    ops_names.append("DEFAULT_INTERPRET")  # the documented env-driven switch
+    return {
+        "repro.core": sorted(core.__all__),
+        "repro.kernels.ops": ops_names,
+    }
+
+
+def main() -> int:
+    if not os.path.exists(DOC):
+        print(f"docs-check: FAIL — {DOC} does not exist")
+        return 1
+    text = open(DOC).read()
+    missing = []
+    for module, names in public_symbols().items():
+        for name in names:
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                missing.append(f"{module}.{name}")
+    if missing:
+        print("docs-check: FAIL — public symbols missing from docs/architecture.md:")
+        for m in missing:
+            print(f"  - {m}")
+        return 1
+    total = sum(len(v) for v in public_symbols().values())
+    print(f"docs-check: OK ({total} public symbols documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
