@@ -4,9 +4,9 @@
 PY ?= python
 
 # perf-trajectory point written by `make ci` (bump per PR: BENCH_2, BENCH_3, ...)
-BENCH_JSON ?= BENCH_5.json
+BENCH_JSON ?= BENCH_6.json
 
-.PHONY: test bench-smoke bench lint ci docs-check
+.PHONY: test bench-smoke bench lint ci docs-check train-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -17,10 +17,15 @@ test:
 docs-check:
 	PYTHONPATH=src $(PY) tools/docs_check.py
 
-# full CI: tier-1 tests + docs gate + smoke benchmarks, recording the perf
-# point that future PRs regress against (batched anchor, tile engine,
-# distributed gather-vs-window bytes)
-ci: test docs-check
+# one real train step on the kernel path (fused SSM scan + Pallas MoE
+# dispatch): finite loss, nonzero grad on every param leaf, params move
+train-smoke:
+	PYTHONPATH=src $(PY) -m repro.train.smoke
+
+# full CI: tier-1 tests + docs gate + kernel-path train step + smoke
+# benchmarks, recording the perf point that future PRs regress against
+# (batched anchor, tile engine, distributed gather-vs-window bytes)
+ci: test docs-check train-smoke
 	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
 
 # fast benchmark sweep (<60 s): small sizes of every paper benchmark

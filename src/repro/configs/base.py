@@ -47,6 +47,10 @@ class ModelConfig:
     ssm_expand: int = 2
     ssm_conv: int = 4
     ssm_chunk: int = 128  # chunked-scan block (materialization/compile trade)
+    # "scan" (chunked associative scan, pure XLA) | "fused" (Pallas VMEM
+    # kernel, repro.kernels.ssm_scan — differentiable via chunk-recompute
+    # custom_vjp, so it serves training as well as prefill)
+    ssm_backend: str = "scan"
 
     # --- attention pattern ---
     sliding_window: int = 0  # 0 = all-global full attention

@@ -20,6 +20,19 @@ resolves to the module-level :data:`DEFAULT_INTERPRET`, which is ``True``
 (interpret mode) unless the ``REPRO_PALLAS_INTERPRET`` environment
 variable says otherwise — set ``REPRO_PALLAS_INTERPRET=0`` on a real TPU
 and every call site in the repo compiles, no call-site edits needed.
+
+**Gradients**: the sorts and top-ks here are *permutations* of their
+inputs, and Siebert & Träff's stable co-rank partition guarantees the
+permutation is well-defined even under duplicate keys — so every wrapper
+defines a ``jax.custom_vjp`` whose forward saves the gather indices (the
+stable argsort, computed by the same kernel with an iota payload) and
+whose backward is ONE inverse-gather scatter of the cotangents.  That
+makes the backward exact in any dtype (each output cotangent lands on
+exactly one input slot, no floating-point accumulation), bit-identical
+to ``jax.grad`` of the pure-JAX core route, and shields the Pallas
+internals from tracing AD.  Ragged / sentinel-masked top-k slots
+(``index == -1``) contribute exactly zero.  Integer inputs take the
+plain kernel path (no tangents exist for them).
 """
 
 from __future__ import annotations
@@ -29,6 +42,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import dtypes as _jdtypes
 
 from repro.core import batched as _bat
 from repro.core import merge_path as _mp
@@ -271,6 +286,74 @@ def _sort_rounds_kv(
     return kflat, vflat
 
 
+# --- raw (non-differentiable) sort bodies -----------------------------------
+
+
+def _sort_impl(x, n, tile, leaf, engine, interp):
+    xp = _mp._pad_pow2(x, _mp.max_sentinel(x.dtype))
+    return _sort_rounds(xp, xp.shape[0], tile, leaf, engine, interp)[:n]
+
+
+def _sort_kv_impl(keys, values, n, tile, leaf, engine, interp):
+    kp = _mp._pad_pow2(keys, _mp.max_sentinel(keys.dtype))
+    vp = _mp._pad_pow2(values, jnp.zeros((), values.dtype))
+    ks, vs = _sort_rounds_kv(kp, vp, kp.shape[0], tile, leaf, engine, interp)
+    return ks[:n], vs[:n]
+
+
+def _sort_batched_impl(x, n, tile, leaf, engine, interp):
+    bsz = x.shape[0]
+    xp = _bat._pad_rows_pow2(x, _mp.max_sentinel(x.dtype))
+    m = xp.shape[1]
+    out = _sort_rounds(xp.reshape(-1), m, tile, leaf, engine, interp)
+    return out.reshape(bsz, m)[:, :n]
+
+
+def _sort_kv_batched_impl(keys, values, n, tile, leaf, engine, interp):
+    bsz = keys.shape[0]
+    kp = _bat._pad_rows_pow2(keys, _mp.max_sentinel(keys.dtype))
+    vp = _bat._pad_rows_pow2(values, jnp.zeros((), values.dtype))
+    m = kp.shape[1]
+    ks, vs = _sort_rounds_kv(
+        kp.reshape(-1), vp.reshape(-1), m, tile, leaf, engine, interp
+    )
+    return ks.reshape(bsz, m)[:, :n], vs.reshape(bsz, m)[:, :n]
+
+
+# --- permutation-transpose VJP glue -----------------------------------------
+
+
+def _inexact(dtype) -> bool:
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.inexact)
+
+
+def _float0(shape):
+    """float0 cotangent zeros — what custom_vjp requires for int primals."""
+    return np.zeros(shape, _jdtypes.float0)
+
+
+def _iota_like(x) -> jax.Array:
+    """Row-index payload whose sorted order IS the stable argsort."""
+    if x.ndim == 1:
+        return jnp.arange(x.shape[0], dtype=jnp.int32)
+    return jnp.broadcast_to(
+        jnp.arange(x.shape[-1], dtype=jnp.int32)[None, :], x.shape
+    )
+
+
+def _scatter_inverse(perm: jax.Array, ct: jax.Array) -> jax.Array:
+    """Permutation transpose: route output cotangents back to input slots.
+
+    ``perm`` is a (batched) permutation — each source index appears
+    exactly once — so the scatter is an exact inverse gather in any
+    dtype (no accumulation happens).
+    """
+    if perm.ndim == 1:
+        return jnp.zeros(perm.shape, ct.dtype).at[perm].set(ct)
+    rows = jnp.arange(perm.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.zeros(perm.shape, ct.dtype).at[rows, perm].set(ct)
+
+
 @_JIT
 def sort(
     x: jax.Array,
@@ -286,14 +369,32 @@ def sort(
     pure-JAX batched merge, wide rounds the flat ``(pair, tile)`` kernel —
     no Python-level loop over run pairs, and the pow2 + sentinel padding
     is built once per sort, not re-appended every round.
+
+    Differentiable: under AD the forward runs the kv kernel with an iota
+    payload to capture the stable argsort, and the backward is one
+    inverse-gather scatter — the exact permutation transpose.
     """
     n = x.shape[0]
     if n <= 1:
         return x
     tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
-    xp = _mp._pad_pow2(x, _mp.max_sentinel(x.dtype))
-    out = _sort_rounds(xp, xp.shape[0], tile, leaf, engine, _interp(interpret))
-    return out[:n]
+    interp = _interp(interpret)
+    if not _inexact(x.dtype):
+        return _sort_impl(x, n, tile, leaf, engine, interp)
+
+    @jax.custom_vjp
+    def f(xx):
+        return _sort_impl(xx, n, tile, leaf, engine, interp)
+
+    def fwd(xx):
+        ks, perm = _sort_kv_impl(xx, _iota_like(xx), n, tile, leaf, engine, interp)
+        return ks, perm
+
+    def bwd(perm, dy):
+        return (_scatter_inverse(perm, dy),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
 
 
 @_JIT
@@ -306,15 +407,37 @@ def sort_kv(
     engine: str = _kern.DEFAULT_ENGINE,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Stable key-value merge sort; wide rounds on the flat round kernel."""
+    """Stable key-value merge sort; wide rounds on the flat round kernel.
+
+    Differentiable in both keys and values via the permutation-transpose
+    VJP (int operands get float0 cotangents, per custom_vjp convention).
+    """
     n = keys.shape[0]
     if n <= 1:
         return keys, values
     tile, leaf = _sort_tile(n, keys.dtype, tile, leaf)
-    kp = _mp._pad_pow2(keys, _mp.max_sentinel(keys.dtype))
-    vp = _mp._pad_pow2(values, jnp.zeros((), values.dtype))
-    ks, vs = _sort_rounds_kv(kp, vp, kp.shape[0], tile, leaf, engine, _interp(interpret))
-    return ks[:n], vs[:n]
+    interp = _interp(interpret)
+    kx, vx = _inexact(keys.dtype), _inexact(values.dtype)
+    if not (kx or vx):
+        return _sort_kv_impl(keys, values, n, tile, leaf, engine, interp)
+
+    @jax.custom_vjp
+    def f(k, v):
+        return _sort_kv_impl(k, v, n, tile, leaf, engine, interp)
+
+    def fwd(k, v):
+        ks, perm = _sort_kv_impl(k, _iota_like(k), n, tile, leaf, engine, interp)
+        # stability makes v[perm] bit-identical to the kernel's value output
+        return (ks, jnp.take(v, perm)), perm
+
+    def bwd(perm, cts):
+        dks, dvs = cts
+        dk = _scatter_inverse(perm, dks) if kx else _float0((n,))
+        dv = _scatter_inverse(perm, dvs) if vx else _float0((n,))
+        return dk, dv
+
+    f.defvjp(fwd, bwd)
+    return f(keys, values)
 
 
 @_JIT
@@ -328,15 +451,31 @@ def sort_batched(
 ) -> jax.Array:
     """Sort every row of ``(B, n)`` ascending; rows ride the same flat
     rounds as :func:`sort` (the batch axis is folded into the run-pair
-    axis, so per-round launch count is independent of ``B``)."""
+    axis, so per-round launch count is independent of ``B``).
+    Differentiable via the per-row permutation-transpose VJP."""
     bsz, n = x.shape
     if n <= 1:
         return x
     tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
-    xp = _bat._pad_rows_pow2(x, _mp.max_sentinel(x.dtype))
-    m = xp.shape[1]
-    out = _sort_rounds(xp.reshape(-1), m, tile, leaf, engine, _interp(interpret))
-    return out.reshape(bsz, m)[:, :n]
+    interp = _interp(interpret)
+    if not _inexact(x.dtype):
+        return _sort_batched_impl(x, n, tile, leaf, engine, interp)
+
+    @jax.custom_vjp
+    def f(xx):
+        return _sort_batched_impl(xx, n, tile, leaf, engine, interp)
+
+    def fwd(xx):
+        ks, perm = _sort_kv_batched_impl(
+            xx, _iota_like(xx), n, tile, leaf, engine, interp
+        )
+        return ks, perm
+
+    def bwd(perm, dy):
+        return (_scatter_inverse(perm, dy),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
 
 
 @_JIT
@@ -350,18 +489,36 @@ def sort_kv_batched(
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Row-wise stable key-value sort of ``(B, n)`` keys (ascending),
-    kernel-backed like :func:`sort_batched`."""
+    kernel-backed like :func:`sort_batched` and differentiable in both
+    operands via the per-row permutation-transpose VJP."""
     bsz, n = keys.shape
     if n <= 1:
         return keys, values
     tile, leaf = _sort_tile(n, keys.dtype, tile, leaf)
-    kp = _bat._pad_rows_pow2(keys, _mp.max_sentinel(keys.dtype))
-    vp = _bat._pad_rows_pow2(values, jnp.zeros((), values.dtype))
-    m = kp.shape[1]
-    ks, vs = _sort_rounds_kv(
-        kp.reshape(-1), vp.reshape(-1), m, tile, leaf, engine, _interp(interpret)
-    )
-    return ks.reshape(bsz, m)[:, :n], vs.reshape(bsz, m)[:, :n]
+    interp = _interp(interpret)
+    kx, vx = _inexact(keys.dtype), _inexact(values.dtype)
+    if not (kx or vx):
+        return _sort_kv_batched_impl(keys, values, n, tile, leaf, engine, interp)
+
+    @jax.custom_vjp
+    def f(k, v):
+        return _sort_kv_batched_impl(k, v, n, tile, leaf, engine, interp)
+
+    def fwd(k, v):
+        ks, perm = _sort_kv_batched_impl(
+            k, _iota_like(k), n, tile, leaf, engine, interp
+        )
+        rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+        return (ks, v[rows, perm]), perm
+
+    def bwd(perm, cts):
+        dks, dvs = cts
+        dk = _scatter_inverse(perm, dks) if kx else _float0((bsz, n))
+        dv = _scatter_inverse(perm, dvs) if vx else _float0((bsz, n))
+        return dk, dv
+
+    f.defvjp(fwd, bwd)
+    return f(keys, values)
 
 
 def merge_k(
@@ -434,15 +591,39 @@ def topk_batched(
     ``lax.top_k`` tie-breaking, exact at ``iinfo.min`` via
     ``flip_desc``), but the sort rounds run on the flat round kernel
     with tuned ``(tile, leaf)`` — the serving sampler's wide-vocab path.
+    Differentiable: the backward scatters the k value-cotangents back to
+    their source columns (one exact inverse gather).
     """
     bsz, n = x.shape
     k = min(k, n)
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
-    _, perm = sort_kv_batched(
-        _mp.flip_desc(x), idx, tile=tile, leaf=leaf, engine=engine, interpret=interpret
-    )
-    top_idx = perm[:, :k]
-    return jnp.take_along_axis(x, top_idx, axis=1), top_idx
+    tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
+    interp = _interp(interpret)
+
+    def _primal(xx):
+        _, perm = _sort_kv_batched_impl(
+            _mp.flip_desc(xx), _iota_like(xx), n, tile, leaf, engine, interp
+        )
+        top_idx = perm[:, :k]
+        return jnp.take_along_axis(xx, top_idx, axis=1), top_idx
+
+    if not _inexact(x.dtype):
+        return _primal(x)
+
+    @jax.custom_vjp
+    def f(xx):
+        return _primal(xx)
+
+    def fwd(xx):
+        vals, top_idx = _primal(xx)
+        return (vals, top_idx), top_idx
+
+    def bwd(top_idx, cts):
+        dvals, _ = cts  # index cotangent is float0
+        rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+        return (jnp.zeros((bsz, n), dvals.dtype).at[rows, top_idx].set(dvals),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
 
 
 @functools.partial(
@@ -464,18 +645,48 @@ def topk_batched_ragged(
     exactly (masked slots: index ``-1``, dtype-min value); the underlying
     sort is the same sentinel-mask-then-sort reduction the core ragged
     kv-sort uses, so padded rows are bit-identical to their truncations.
+    Differentiable: cotangents of masked (sentinel) slots are provably
+    zeroed — only valid slots scatter back, so rows shorter than ``k``
+    get exactly the gradient their truncation would.
     """
     bsz, n = x.shape
     k = min(k, n)
     lens = _bat._as_lens(lens, bsz, n)
-    keys = _bat._mask_rows(_mp.flip_desc(x), lens, _mp.max_sentinel(x.dtype))
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
-    _, perm = sort_kv_batched(
-        keys, idx, tile=tile, leaf=leaf, engine=engine, interpret=interpret
-    )
-    top_idx = perm[:, :k]
-    vals = jnp.take_along_axis(x, top_idx, axis=1)
-    slot_valid = jnp.arange(k, dtype=jnp.int32)[None, :] < lens[:, None]
-    vals = jnp.where(slot_valid, vals, _mp.min_sentinel(x.dtype))
-    top_idx = jnp.where(slot_valid, top_idx, -1)
-    return vals, top_idx
+    tile, leaf = _sort_tile(n, x.dtype, tile, leaf)
+    interp = _interp(interpret)
+
+    def _primal(xx, ln):
+        keys = _bat._mask_rows(_mp.flip_desc(xx), ln, _mp.max_sentinel(xx.dtype))
+        _, perm = _sort_kv_batched_impl(
+            keys, _iota_like(xx), n, tile, leaf, engine, interp
+        )
+        top_idx = perm[:, :k]
+        vals = jnp.take_along_axis(xx, top_idx, axis=1)
+        slot_valid = jnp.arange(k, dtype=jnp.int32)[None, :] < ln[:, None]
+        vals = jnp.where(slot_valid, vals, _mp.min_sentinel(xx.dtype))
+        top_idx = jnp.where(slot_valid, top_idx, -1)
+        return vals, top_idx
+
+    if not _inexact(x.dtype):
+        return _primal(x, lens)
+
+    @jax.custom_vjp
+    def f(xx, ln):
+        return _primal(xx, ln)
+
+    def fwd(xx, ln):
+        vals, top_idx = _primal(xx, ln)
+        return (vals, top_idx), top_idx
+
+    def bwd(top_idx, cts):
+        dvals, _ = cts
+        valid = top_idx >= 0
+        safe_idx = jnp.where(valid, top_idx, 0)
+        contrib = jnp.where(valid, dvals, jnp.zeros((), dvals.dtype))
+        rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+        # .add (not .set): masked slots alias column 0 with zero contribution
+        dx = jnp.zeros((bsz, n), dvals.dtype).at[rows, safe_idx].add(contrib)
+        return dx, _float0((bsz,))
+
+    f.defvjp(fwd, bwd)
+    return f(x, lens)

@@ -10,25 +10,42 @@ VMEM version:
 * grid = (batch, d_inner tiles, seq chunks), sequential over seq (TPU
   grid order guarantees the scratch carries across the seq dimension);
 * the (d_tile, state) hidden state lives in a VMEM scratch buffer and is
-  NEVER written to HBM (except nothing — y is the only output);
+  NEVER written to HBM (forward only checkpoints it once per seq chunk);
 * HBM traffic = read dt/x (B,S,D), B/C (B,S,st), write y (B,S,D):
   ~3*B*S*D + 2*B*S*st elements total vs >= 2*log2(S)*B*S*D*st for the
   associative scan — a ~100x reduction at D=8192, st=16, S=4096.
 
-Forward only (inference/prefill path; a custom-vjp training version would
-recompute per-chunk states — noted in EXPERIMENTS §Perf).  Validated in
-interpret mode against ref.ssm_scan_ref.
+**Differentiable** (``jax.custom_vjp``): the forward kernel additionally
+writes the carried state at every seq-chunk *start* (the checkpoint
+tensor ``(B, S/chunk, D, st)`` — a factor ``chunk`` smaller than the
+activations the XLA path would save), and the backward is a second Pallas
+kernel on the same ``(batch, d_tile, seq-chunk)`` grid running the seq
+chunks in **reversed** order: each chunk recomputes its per-step states
+from the checkpoint (one extra forward pass — the same VMEM-residency
+argument as the forward), then runs the reverse linear-recurrence
+accumulation ``g_{t-1} = g_t * decay_t`` entirely in VMEM, emitting
+``d_dt / d_x / d_B / d_C / d_A`` in one pass.  Validated in interpret
+mode against ``jax.grad`` of :func:`ssm_scan_ref` (``tests/
+test_ssm_kernel.py``).
+
+Cost model of the backward: HBM reads = the forward's inputs + dy +
+checkpoints, writes = the five gradients; compute = 2x the forward
+(recompute + reverse pass).  VMEM high-water = ``(chunk+1) * d_tile *
+st`` f32 for the recomputed states — pick ``(chunk, d_tile)`` so that
+fits (see docs/architecture.md §Training path).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .merge_path import _interp
 
 
 def ssm_scan_ref(dt, x, bmat, cmat, a):
@@ -57,13 +74,22 @@ def ssm_scan_ref(dt, x, bmat, cmat, a):
     return ys.transpose(1, 0, 2).astype(x.dtype), h_final
 
 
-def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref, h_scr, *, chunk: int):
+def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref, *rest,
+            chunk: int, checkpoints: bool):
+    if checkpoints:
+        hstart_ref, h_scr = rest
+    else:
+        (h_scr,) = rest
     s_idx = pl.program_id(2)
     n_s = pl.num_programs(2)
 
     @pl.when(s_idx == 0)
     def _init():
         h_scr[...] = jnp.zeros_like(h_scr)
+
+    if checkpoints:
+        # state at the START of this chunk — what the backward recomputes from
+        hstart_ref[0, 0] = h_scr[...]
 
     a = a_ref[...].astype(jnp.float32)  # (d_tile, st)
 
@@ -86,6 +112,221 @@ def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, hlast_ref, h_scr, *, chun
         hlast_ref[0] = h
 
 
+def _fwd_call(dt, x, bmat, cmat, a, chunk: int, d_tile: int, interpret: bool,
+              checkpoints: bool):
+    bsz, s, d = x.shape
+    st = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    assert d % d_tile == 0, (d, d_tile)
+    n_s = s // chunk
+    grid = (bsz, d // d_tile, n_s)
+
+    out_specs = [
+        pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # y
+        pl.BlockSpec((1, d_tile, st), lambda b, dd, ss: (b, dd, 0)),  # h_final
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+        jax.ShapeDtypeStruct((bsz, d, st), jnp.float32),
+    ]
+    if checkpoints:
+        out_specs.append(
+            pl.BlockSpec((1, 1, d_tile, st), lambda b, dd, ss: (b, ss, dd, 0))
+        )
+        out_shape.append(jax.ShapeDtypeStruct((bsz, n_s, d, st), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, checkpoints=checkpoints),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # dt
+            pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # x
+            pl.BlockSpec((1, chunk, st), lambda b, dd, ss: (b, ss, 0)),  # B
+            pl.BlockSpec((1, chunk, st), lambda b, dd, ss: (b, ss, 0)),  # C
+            pl.BlockSpec((d_tile, st), lambda b, dd, ss: (dd, 0)),  # A
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((d_tile, st), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, bmat, cmat, a)
+
+
+def _bwd_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, hstart_ref, dy_ref, dhfin_ref,
+                ddt_ref, dx_ref, db_ref, dc_ref, da_ref,
+                h_scr, g_scr, da_scr, *, chunk: int):
+    """Reverse pass over one (batch row, d-tile, seq chunk) cell.
+
+    Grid is ``(batch, seq chunk, d tile)`` with the seq axis REVERSED by
+    the index maps (grid step ``ss`` touches chunk ``n_s - 1 - ss``) and
+    the d-tile axis innermost so the dB/dC partial sums over d-tiles
+    accumulate into a block that stays VMEM-resident between consecutive
+    grid steps.  Per-(b, d-tile) reverse carries live in scratch slabs
+    indexed by the d-tile id.
+    """
+    b_idx = pl.program_id(0)
+    s_idx = pl.program_id(1)  # 0 == LAST seq chunk (reversed index maps)
+    d_idx = pl.program_id(2)
+    n_b = pl.num_programs(0)
+    n_s = pl.num_programs(1)
+
+    a = a_ref[...].astype(jnp.float32)  # (d_tile, st)
+    st = a.shape[-1]
+
+    # 1) recompute this chunk's states from the checkpoint:
+    #    h_scr[i] = state BEFORE step i (h_scr[chunk] = state after the chunk)
+    def fwd_body(i, h):
+        h_scr[i] = h
+        dt_i = dt_ref[0, i, :].astype(jnp.float32)
+        x_i = x_ref[0, i, :].astype(jnp.float32)
+        b_i = b_ref[0, i, :].astype(jnp.float32)
+        decay = jnp.exp(dt_i[:, None] * a)
+        return decay * h + (dt_i * x_i)[:, None] * b_i[None, :]
+
+    h_last = jax.lax.fori_loop(
+        0, chunk, fwd_body, hstart_ref[0, 0].astype(jnp.float32)
+    )
+    h_scr[chunk] = h_last
+
+    # 2) reverse accumulation; g = dL/dh_t carried right-to-left
+    @pl.when(s_idx == 0)
+    def _init_g():
+        g_scr[d_idx] = dhfin_ref[0].astype(jnp.float32)
+
+    def bwd_body(i, carry):
+        g, db_acc, dc_acc, da_acc = carry
+        t = chunk - 1 - i
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (d_tile,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)  # (st,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        dy_t = dy_ref[0, t, :].astype(jnp.float32)  # (d_tile,)
+        h_prev = h_scr[t]  # (d_tile, st)
+        h_t = h_scr[t + 1]
+        dc_acc = dc_acc.at[t].set(jnp.sum(h_t * dy_t[:, None], axis=0))
+        g = g + dy_t[:, None] * c_t[None, :]
+        decay = jnp.exp(dt_t[:, None] * a)
+        gdec = g * h_prev * decay  # = dL/d(dt_t ⊗ a), chained through exp
+        s_gb = jnp.sum(g * b_t[None, :], axis=1)  # (d_tile,) = dL/d(dt_t * x_t)
+        ddt_ref[0, t, :] = jnp.sum(gdec * a, axis=1) + x_t * s_gb
+        dx_ref[0, t, :] = dt_t * s_gb
+        db_acc = db_acc.at[t].set(jnp.sum(g * (dt_t * x_t)[:, None], axis=0))
+        da_acc = da_acc + dt_t[:, None] * gdec
+        g = g * decay
+        return g, db_acc, dc_acc, da_acc
+
+    zeros_cs = jnp.zeros((chunk, st), jnp.float32)
+    g, db_acc, dc_acc, da_acc = jax.lax.fori_loop(
+        0, chunk, bwd_body, (g_scr[d_idx], zeros_cs, zeros_cs, jnp.zeros_like(a))
+    )
+    g_scr[d_idx] = g
+
+    # dB/dC: partial sums over this d-tile; the (b, chunk) output block is
+    # revisited consecutively as d_idx advances, so accumulate in place
+    @pl.when(d_idx == 0)
+    def _db_init():
+        db_ref[0] = db_acc
+        dc_ref[0] = dc_acc
+
+    @pl.when(d_idx > 0)
+    def _db_acc():
+        db_ref[0] = db_ref[0] + db_acc
+        dc_ref[0] = dc_ref[0] + dc_acc
+
+    # dA: accumulated over batch AND seq in scratch, written once at the
+    # final visit of this d-tile
+    first = jnp.logical_and(b_idx == 0, s_idx == 0)
+
+    @pl.when(first)
+    def _da_init():
+        da_scr[d_idx] = da_acc
+
+    @pl.when(jnp.logical_not(first))
+    def _da_acc():
+        da_scr[d_idx] = da_scr[d_idx] + da_acc
+
+    @pl.when(jnp.logical_and(b_idx == n_b - 1, s_idx == n_s - 1))
+    def _da_out():
+        da_ref[...] = da_scr[d_idx]
+
+
+def _bwd_call(dt, x, bmat, cmat, a, hstart, dy, dhfin,
+              chunk: int, d_tile: int, interpret: bool):
+    bsz, s, d = x.shape
+    st = bmat.shape[-1]
+    n_s = s // chunk
+    n_d = d // d_tile
+    grid = (bsz, n_s, n_d)
+    rev = lambda ss: n_s - 1 - ss  # noqa: E731 — seq chunks in reverse
+
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, ss, dd: (b, rev(ss), dd)),  # dt
+            pl.BlockSpec((1, chunk, d_tile), lambda b, ss, dd: (b, rev(ss), dd)),  # x
+            pl.BlockSpec((1, chunk, st), lambda b, ss, dd: (b, rev(ss), 0)),  # B
+            pl.BlockSpec((1, chunk, st), lambda b, ss, dd: (b, rev(ss), 0)),  # C
+            pl.BlockSpec((d_tile, st), lambda b, ss, dd: (dd, 0)),  # A
+            pl.BlockSpec((1, 1, d_tile, st), lambda b, ss, dd: (b, rev(ss), dd, 0)),  # hstart
+            pl.BlockSpec((1, chunk, d_tile), lambda b, ss, dd: (b, rev(ss), dd)),  # dy
+            pl.BlockSpec((1, d_tile, st), lambda b, ss, dd: (b, dd, 0)),  # dhfin
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, ss, dd: (b, rev(ss), dd)),  # ddt
+            pl.BlockSpec((1, chunk, d_tile), lambda b, ss, dd: (b, rev(ss), dd)),  # dx
+            pl.BlockSpec((1, chunk, st), lambda b, ss, dd: (b, rev(ss), 0)),  # dB
+            pl.BlockSpec((1, chunk, st), lambda b, ss, dd: (b, rev(ss), 0)),  # dC
+            pl.BlockSpec((d_tile, st), lambda b, ss, dd: (dd, 0)),  # dA
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), f32),
+            jax.ShapeDtypeStruct((bsz, s, d), f32),
+            jax.ShapeDtypeStruct((bsz, s, st), f32),
+            jax.ShapeDtypeStruct((bsz, s, st), f32),
+            jax.ShapeDtypeStruct((d, st), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((chunk + 1, d_tile, st), f32),  # recomputed chunk states
+            pltpu.VMEM((n_d, d_tile, st), f32),  # g carry, one slab per d-tile
+            pltpu.VMEM((n_d, d_tile, st), f32),  # dA accumulator per d-tile
+        ],
+        interpret=interpret,
+    )(dt, x, bmat, cmat, a, hstart, dy, dhfin)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _ssm_scan(dt, x, bmat, cmat, a, chunk, d_tile, interpret):
+    y, h_final = _fwd_call(dt, x, bmat, cmat, a, chunk, d_tile, interpret,
+                           checkpoints=False)
+    return y, h_final
+
+
+def _ssm_scan_fwd(dt, x, bmat, cmat, a, chunk, d_tile, interpret):
+    y, h_final, hstart = _fwd_call(dt, x, bmat, cmat, a, chunk, d_tile, interpret,
+                                   checkpoints=True)
+    return (y, h_final), (dt, x, bmat, cmat, a, hstart)
+
+
+def _ssm_scan_bwd(chunk, d_tile, interpret, res, cts):
+    dt, x, bmat, cmat, a, hstart = res
+    dy, dhfin = cts
+    ddt, dx, db, dc, da = _bwd_call(
+        dt, x, bmat, cmat, a, hstart, dy, dhfin, chunk, d_tile, interpret
+    )
+    return (
+        ddt.astype(dt.dtype),
+        dx.astype(x.dtype),
+        db.astype(bmat.dtype),
+        dc.astype(cmat.dtype),
+        da.astype(a.dtype),
+    )
+
+
+_ssm_scan.defvjp(_ssm_scan_fwd, _ssm_scan_bwd)
+
+
 def ssm_scan_pallas(
     dt: jax.Array,  # (B, S, D)
     x: jax.Array,
@@ -95,44 +336,48 @@ def ssm_scan_pallas(
     *,
     chunk: int = 256,
     d_tile: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused scan; returns (y (B,S,D), h_final (B,D,st))."""
-    bsz, s, d = x.shape
-    st = bmat.shape[-1]
-    chunk = min(chunk, s)
-    d_tile = min(d_tile, d)
-    assert s % chunk == 0, (s, chunk)
-    assert d % d_tile == 0, (d, d_tile)
-    grid = (bsz, d // d_tile, s // chunk)
+    """Fused, differentiable scan; returns (y (B,S,D), h_final (B,D,st)).
 
-    y, h_final = pl.pallas_call(
-        functools.partial(_kernel, chunk=chunk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # dt
-            pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # x
-            pl.BlockSpec((1, chunk, st), lambda b, dd, ss: (b, ss, 0)),  # B
-            pl.BlockSpec((1, chunk, st), lambda b, dd, ss: (b, ss, 0)),  # C
-            pl.BlockSpec((d_tile, st), lambda b, dd, ss: (dd, 0)),  # A
-        ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, d_tile), lambda b, dd, ss: (b, ss, dd)),  # y
-            pl.BlockSpec((1, d_tile, st), lambda b, dd, ss: (b, dd, 0)),  # h_final
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
-            jax.ShapeDtypeStruct((bsz, d, st), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((d_tile, st), jnp.float32)],
-        interpret=interpret,
-    )(dt, x, bmat, cmat, a)
+    ``jax.grad`` through this runs the chunk-recompute backward kernel
+    (see module docstring).  ``S`` need not divide ``chunk``: the tail is
+    padded with identity steps (``dt = 0`` ⇒ ``decay = 1, upd = 0``), so
+    ``h_final`` and the trimmed ``y`` — and their gradients — are exact.
+    ``interpret=None`` resolves through ``REPRO_PALLAS_INTERPRET`` like
+    every :mod:`repro.kernels.ops` wrapper.
+    """
+    bsz, s, d = x.shape
+    chunk = max(1, min(chunk, s))
+    d_tile = max(1, min(d_tile, d))
+    while d % d_tile:  # largest divisor of D at or below the requested tile
+        d_tile -= 1
+    pad = (-s) % chunk
+    if pad:
+        widen = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))  # noqa: E731
+        dt, x, bmat, cmat = widen(dt), widen(x), widen(bmat), widen(cmat)
+    y, h_final = _ssm_scan(dt, x, bmat, cmat, a, chunk, d_tile, _interp(interpret))
+    if pad:
+        y = y[:, :s]
     return y, h_final
+
+
+# primary public name (the kernel the training path differentiates through)
+ssm_scan = ssm_scan_pallas
 
 
 def fused_hbm_bytes(bsz: int, s: int, d: int, st: int, elem: int = 2) -> int:
     """Analytic HBM traffic of the fused kernel (for §Perf napkin math)."""
     return elem * (3 * bsz * s * d + 2 * bsz * s * st) + 4 * bsz * d * st
+
+
+def bwd_hbm_bytes(bsz: int, s: int, d: int, st: int, chunk: int, elem: int = 2) -> int:
+    """Analytic HBM traffic of the recompute backward: forward inputs + dy +
+    checkpoints in, five gradients out."""
+    fwd_in = elem * (3 * bsz * s * d + 2 * bsz * s * st)
+    ckpt = 4 * bsz * (s // max(1, chunk)) * d * st
+    grads_out = 4 * (2 * bsz * s * d + 2 * bsz * s * st + d * st)
+    return fwd_in + ckpt + grads_out
 
 
 def xla_scan_hbm_bytes(bsz: int, s: int, d: int, st: int, elem: int = 4) -> int:

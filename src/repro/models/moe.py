@@ -20,6 +20,15 @@ Pipeline (per batch row, vmapped so the batch axis stays data-sharded):
 
 ``moe_dispatch="cumsum"`` selects the conventional one-hot-cumsum
 position computation as the ablation baseline (benchmarks table 2).
+
+**Gradients.** Every dispatch route is differentiable, including
+``"merge_path_pallas"``: the sort acts on integer (expert_id, slot) pairs
+— a pure permutation with no float tangents — and the float scatter /
+gather / combine steps are plain ``.at[]`` indexing with exact transpose
+rules (the kernel-backed float sorts in ``repro.kernels.ops`` carry their
+own permutation-transpose ``custom_vjp``).  ``train/steps.py`` therefore
+trains on the kernel path directly; there is no oracle-route fallback
+under ``forward_train``.
 """
 
 from __future__ import annotations

@@ -1,11 +1,20 @@
 """Mamba-1 selective SSM block (falcon-mamba, hymba's mamba heads).
 
 TPU adaptation: the CUDA "hardware-aware" kernel (fused recurrent scan in
-SRAM) becomes a **chunked associative scan**: ``lax.scan`` over sequence
-chunks (bounding materialized state to one chunk) with a parallel
-``lax.associative_scan`` inside each chunk (log-depth on the VPU).  The
-(decay, update) pairs form the standard linear-recurrence monoid
-``(a2, b2) ∘ (a1, b1) = (a1*a2, b1*a2 + b2)``.
+SRAM) becomes, per ``cfg.ssm_backend``:
+
+* ``"scan"`` — a **chunked associative scan**: ``lax.scan`` over sequence
+  chunks (bounding materialized state to one chunk) with a parallel
+  ``lax.associative_scan`` inside each chunk (log-depth on the VPU).  The
+  (decay, update) pairs form the standard linear-recurrence monoid
+  ``(a2, b2) ∘ (a1, b1) = (a1*a2, b1*a2 + b2)``.
+* ``"fused"`` — the Pallas VMEM kernel
+  (:func:`repro.kernels.ssm_scan.ssm_scan_pallas`): the recurrence state
+  never touches HBM and the (B, S, d_inner, state) decay/update tensors
+  are never materialized at all.  The kernel carries a chunk-recompute
+  ``jax.custom_vjp``, so this backend trains — ``jax.grad`` through
+  ``forward_train`` runs the recompute backward kernel, no oracle-route
+  fallback.
 """
 
 from __future__ import annotations
@@ -76,6 +85,41 @@ def _ssm_scan_chunked(decay: jax.Array, upd: jax.Array, h0: jax.Array, chunk: in
     return ys, h_final
 
 
+def ssm_apply(
+    dt: jax.Array,  # (B,S,di) f32 (post-softplus step sizes)
+    xc: jax.Array,  # (B,S,di) conv+silu activations
+    bmat: jax.Array,  # (B,S,st)
+    cmat: jax.Array,  # (B,S,st)
+    a: jax.Array,  # (di,st) f32, negative
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Selective-scan core shared by :func:`mamba_forward` and the hybrid
+    block; returns ``(y (B,S,di) f32 = Σ_s h·C, h_final (B,di,st) f32)``.
+
+    ``cfg.ssm_backend == "fused"`` routes through the differentiable
+    Pallas kernel (state VMEM-resident, decay/update tensors never
+    materialized, chunk-recompute backward); ``"scan"`` materializes the
+    (B,S,di,st) decay/update pairs in ``cfg.ssm_scan_dtype`` and runs the
+    chunked associative scan.
+    """
+    b, s, di = xc.shape
+    st = bmat.shape[-1]
+    if cfg.ssm_backend == "fused":
+        from repro.kernels.ssm_scan import ssm_scan_pallas
+
+        y, h_final = ssm_scan_pallas(dt, xc, bmat, cmat, a, chunk=cfg.ssm_chunk)
+        return y.astype(jnp.float32), h_final
+    sdt = jnp.dtype(cfg.ssm_scan_dtype)
+    decay = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)  # (B,S,di,st)
+    upd = ((dt[..., None] * bmat.astype(jnp.float32)[:, :, None, :])
+           * xc.astype(jnp.float32)[..., None]).astype(sdt)
+    h0 = jnp.zeros((b, di, st), sdt)
+    hs, h_final = _ssm_scan_chunked(decay, upd, h0, cfg.ssm_chunk)
+    hs = hs.astype(jnp.float32)
+    y = jnp.sum(hs * cmat.astype(jnp.float32)[:, :, None, :], axis=-1)  # (B,S,di)
+    return y, h_final.astype(jnp.float32)
+
+
 def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
     """Depthwise causal conv; x (B,S,di), w (di,k), state (B,k-1,di) or None."""
     k = w.shape[1]
@@ -106,14 +150,7 @@ def mamba_forward(
     dt_r, bmat, cmat = jnp.split(proj, [r, r + st], axis=-1)
     dt = jax.nn.softplus(dt_r @ params["dt_proj"] + params["dt_bias"]).astype(jnp.float32)
     a = -jnp.exp(params["A_log"])  # (di, st)
-    sdt = jnp.dtype(cfg.ssm_scan_dtype)
-    decay = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)  # (B,S,di,st)
-    upd = ((dt[..., None] * bmat.astype(jnp.float32)[:, :, None, :])
-           * xc.astype(jnp.float32)[..., None]).astype(sdt)
-    h0 = jnp.zeros((b, di, st), sdt)
-    hs, _ = _ssm_scan_chunked(decay, upd, h0, cfg.ssm_chunk)
-    hs = hs.astype(jnp.float32)
-    y = jnp.sum(hs * cmat.astype(jnp.float32)[:, :, None, :], axis=-1)  # (B,S,di)
+    y, _ = ssm_apply(dt, xc, bmat, cmat, a, cfg)  # (B,S,di) f32
     y = (y + params["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = constrain(y, "act_batch", "act_seq", "act_ff")

@@ -191,11 +191,7 @@ def _mamba_with_state(p, h, cfg):
     dt_r, bmat, cmat = jnp.split(proj, [r, r + st], axis=-1)
     dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
     a = -jnp.exp(p["A_log"])
-    decay = jnp.exp(dt[..., None] * a[None, None])
-    upd = (dt[..., None] * bmat.astype(jnp.float32)[:, :, None, :]) * xc.astype(jnp.float32)[..., None]
-    h0 = jnp.zeros((b, di, st), jnp.float32)
-    hs, h_final = ssm_mod._ssm_scan_chunked(decay, upd, h0, cfg.ssm_chunk)
-    y = jnp.sum(hs * cmat.astype(jnp.float32)[:, :, None, :], axis=-1)
+    y, h_final = ssm_mod.ssm_apply(dt, xc, bmat, cmat, a, cfg)
     y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(h.dtype)
     y = y * jax.nn.silu(z)
     return y @ p["out_proj"], conv_state, h_final
