@@ -3,10 +3,11 @@
 
 PY ?= python
 
-# perf-trajectory point written by `make ci` (bump per PR: BENCH_2, BENCH_3, ...)
-BENCH_JSON ?= BENCH_6.json
+# perf-trajectory point written by `make ci`: derived automatically as
+# highest existing BENCH_<n>.json + 1, so PRs can't forget the bump
+BENCH_JSON ?= $(shell $(PY) tools/bench_diff.py --next)
 
-.PHONY: test bench-smoke bench lint ci docs-check train-smoke
+.PHONY: test bench-smoke bench lint check ci docs-check train-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -22,11 +23,21 @@ docs-check:
 train-smoke:
 	PYTHONPATH=src $(PY) -m repro.train.smoke
 
-# full CI: tier-1 tests + docs gate + kernel-path train step + smoke
-# benchmarks, recording the perf point that future PRs regress against
-# (batched anchor, tile engine, distributed gather-vs-window bytes)
-ci: test docs-check train-smoke
+# static analysis, run before anything launches: abstract kernel-contract
+# checker (eval_shape only — zero device kernels), repo-specific AST lint,
+# and the perf-regression gate over existing BENCH_*.json anchor rows
+check:
+	PYTHONPATH=src $(PY) -m repro.analysis
+	$(PY) tools/lint_rules.py
+	$(PY) tools/bench_diff.py --check
+
+# full CI: static analysis first (contract violations fail fast, no
+# kernels run), then tier-1 tests + docs gate + kernel-path train step +
+# smoke benchmarks recording the perf point, then the bench-diff gate
+# re-checks the fresh snapshot against the previous PR's
+ci: check test docs-check train-smoke
 	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
+	$(PY) tools/bench_diff.py --check
 
 # fast benchmark sweep (<60 s): small sizes of every paper benchmark
 bench-smoke:
@@ -36,8 +47,9 @@ bench-smoke:
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
 
-# no third-party linters are baked into the container, so lint =
-# bytecode-compile everything (catches syntax/indentation/encoding errors)
+# bytecode-compile everything (syntax/indentation/encoding errors) plus
+# the repo-specific AST rules (stdlib ast only — the container is offline)
 lint:
-	$(PY) -m compileall -q src tests benchmarks examples
+	$(PY) -m compileall -q src tests benchmarks examples tools
+	$(PY) tools/lint_rules.py
 	@echo "lint OK"

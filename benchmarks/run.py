@@ -69,6 +69,14 @@ def main() -> None:
             "total_seconds": round(total_s, 1),
             "rows": rows,
         }
+        # record the perf-gate anchor rows explicitly so a snapshot is
+        # self-describing (tools/bench_diff.py diffs these across PRs)
+        from tools.bench_diff import anchor_values
+
+        payload["anchors"] = {
+            name: {"metric": metric, "value": value}
+            for name, (metric, value) in sorted(anchor_values(payload).items())
+        }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)

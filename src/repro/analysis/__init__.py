@@ -1,0 +1,59 @@
+"""Static analysis for the Merge Path kernels: prove the contracts
+before anything runs.
+
+Two engines (see ``docs/analysis.md`` for the rule catalog):
+
+* **abstract kernel analysis** (:mod:`repro.analysis.checker`) — every
+  kernel entry point declares a :class:`KernelContract`; the checker
+  sweeps a parameter lattice with ``jax.eval_shape`` (no device
+  execution) and closed-form models of block divisibility, scalar-
+  prefetch bounds, sentinel policy and VMEM high-water;
+* **AST lint** (``tools/lint_rules.py``) — repo-specific source rules
+  learned from past bugs (literal ``interpret=``, ``-x`` on int keys,
+  raw sentinel construction, loop-over-pairs hot paths, untested
+  ``custom_vjp``).
+
+Entry points: ``python -m repro.analysis [--fast]`` or ``make check``.
+"""
+
+from .checker import (
+    VMEM_BUDGET_BYTES,
+    Violation,
+    block_divisibility_violations,
+    check_contract,
+    check_kernels,
+    completeness_violations,
+    grad_violations,
+    prefetch_violations,
+    rejection_violations,
+    sentinel_violations,
+    shape_violations,
+    vmem_bytes,
+    vmem_violations,
+)
+from .lattice import LatticeConfig, model_lattice, scan_lattice, trace_lattice
+from .registry import REGISTRY, KernelContract, kernel_contract, registered_contracts
+
+__all__ = [
+    "KernelContract",
+    "kernel_contract",
+    "registered_contracts",
+    "REGISTRY",
+    "LatticeConfig",
+    "model_lattice",
+    "trace_lattice",
+    "scan_lattice",
+    "Violation",
+    "VMEM_BUDGET_BYTES",
+    "check_kernels",
+    "check_contract",
+    "completeness_violations",
+    "shape_violations",
+    "block_divisibility_violations",
+    "rejection_violations",
+    "prefetch_violations",
+    "sentinel_violations",
+    "vmem_bytes",
+    "vmem_violations",
+    "grad_violations",
+]

@@ -1,0 +1,44 @@
+"""CLI driver: ``python -m repro.analysis [--fast]``.
+
+Runs the abstract kernel analysis (Engine 1) over every registered
+contract and exits non-zero if any rule fires.  Pure abstract tracing —
+no kernel is launched, so this is safe (and fast) on a CPU-only CI box.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Abstract contract checker for the Merge Path kernels.",
+    )
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink the eval_shape trace lattice (test-suite mode)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="arithmetic rules only — skip eval_shape tracing")
+    args = ap.parse_args(argv)
+
+    from . import check_kernels, registered_contracts
+
+    t0 = time.time()
+    violations = check_kernels(fast=args.fast, trace=not args.no_trace)
+    dt = time.time() - t0
+    n = len(registered_contracts())
+    if violations:
+        for v in violations:
+            print(f"analysis: {v}", file=sys.stderr)
+        print(f"analysis: FAIL ({len(violations)} violations across "
+              f"{n} contracts, {dt:.1f}s)", file=sys.stderr)
+        return 1
+    print(f"analysis: OK ({n} contracts proven on the lattice, {dt:.1f}s, "
+          f"0 kernels launched)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

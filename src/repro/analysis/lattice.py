@@ -1,0 +1,118 @@
+"""Parameter lattice for the abstract kernel checker.
+
+One :class:`LatticeConfig` is one point the checker proves the contracts
+at: dtype x problem size x (tile, leaf) x engine x batch, plus the SSM
+scan's own (seq, d_model, state, chunk, d_tile) axes.  Two lattices are
+drawn from it:
+
+* the **model lattice** (:func:`model_lattice`) — every combination the
+  pure-arithmetic rules (block divisibility, prefetch bounds, VMEM
+  budget) sweep; these cost microseconds each, so it is deliberately
+  broad: non-divisible and non-pow2 sizes, both engines, every dtype;
+* the **trace lattice** (:func:`trace_lattice`) — the subset actually
+  pushed through ``jax.eval_shape`` (abstract tracing of the real
+  wrappers, no device execution).  Tracing costs ~0.1-1 s per point, so
+  this samples the interesting corners (smallest/largest tile, int and
+  float keys, ragged + uniform, a non-divisible size) rather than the
+  full cross product.
+
+Sizes are chosen to exercise the historical failure modes: ``n = 96``
+(smaller than every tile — the pure-JAX fallback route), ``n = 1000``
+(non-pow2, non-divisible by any tile), ``n = 4096`` (clean pow2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Tuple
+
+DTYPES = ("float32", "int32", "bfloat16")
+SIZES = (96, 1000, 4096)
+TILES = (128, 512)
+LEAVES = (8, 32)
+ENGINES = ("hier", "matrix")
+BATCHES = (1, 4)
+
+
+@dataclass(frozen=True)
+class LatticeConfig:
+    """One point of the contract-checking sweep."""
+
+    dtype: str = "float32"
+    n: int = 4096  # total merged length / sorted row width
+    batch: int = 4
+    tile: int = 512
+    leaf: int = 32
+    engine: str = "hier"
+    ragged: bool = False
+    k: int = 8  # top-k width
+    runs: int = 4  # merge_k fan-in
+    # SSM-scan axes (kind="scan" ignores the merge axes above)
+    seq: int = 256
+    d_model: int = 128
+    state: int = 8
+    chunk: int = 64
+    d_tile: int = 64
+
+    def with_(self, **changes) -> "LatticeConfig":
+        return replace(self, **changes)
+
+    def describe(self) -> str:
+        return (
+            f"dtype={self.dtype} n={self.n} batch={self.batch} tile={self.tile} "
+            f"leaf={self.leaf} engine={self.engine} ragged={self.ragged}"
+        )
+
+
+def model_lattice() -> List[LatticeConfig]:
+    """Full cross product for the arithmetic rules (~hundreds of points)."""
+    out = []
+    for dtype in DTYPES:
+        for n in SIZES:
+            for tile in TILES:
+                for leaf in LEAVES:
+                    for engine in ENGINES:
+                        for batch in BATCHES:
+                            out.append(
+                                LatticeConfig(
+                                    dtype=dtype, n=n, batch=batch,
+                                    tile=tile, leaf=leaf, engine=engine,
+                                )
+                            )
+    return out
+
+
+def trace_lattice(fast: bool = False) -> List[LatticeConfig]:
+    """Sampled corners for abstract tracing (eval_shape) of the wrappers.
+
+    ``fast=True`` (the test suite) keeps two points per contract family;
+    the full set (``make check``) adds the int-key, big-tile, matrix-
+    engine and non-divisible corners.
+    """
+    pts = [
+        LatticeConfig(dtype="float32", n=1000, tile=128, leaf=8, engine="hier"),
+        LatticeConfig(dtype="int32", n=4096, tile=512, leaf=32, engine="hier"),
+    ]
+    if not fast:
+        pts += [
+            LatticeConfig(dtype="float32", n=4096, tile=512, leaf=8, engine="matrix"),
+            LatticeConfig(dtype="bfloat16", n=1000, tile=128, leaf=32, engine="hier"),
+            LatticeConfig(dtype="int32", n=96, tile=128, leaf=8, engine="hier"),
+        ]
+    return pts
+
+
+def scan_lattice(fast: bool = False) -> List[LatticeConfig]:
+    """SSM-scan configs: chunk-divisible and chunk-straddling seq lengths."""
+    pts = [
+        LatticeConfig(dtype="float32", batch=2, seq=256, d_model=128, state=8,
+                      chunk=64, d_tile=64),
+    ]
+    if not fast:
+        pts += [
+            # chunk does not divide seq (the identity-step padded tail) and
+            # d_tile does not divide d_model (wrapper shrinks it to a divisor)
+            LatticeConfig(dtype="bfloat16", batch=1, seq=200, d_model=96, state=4,
+                          chunk=64, d_tile=64),
+        ]
+    return pts

@@ -1,0 +1,118 @@
+"""Kernel contract registry — the declarative half of the static checker.
+
+Every kernel entry point in :mod:`repro.kernels.ops` and
+:mod:`repro.kernels.ssm_scan` carries a :func:`kernel_contract` annotation
+stating the invariants the Merge Path paper (and six PRs of bug history)
+guarantee for it:
+
+* **kind** — which abstract model the checker applies: the tiled merge
+  kernels share one grid/BlockSpec/prefetch model, the flat sort rounds
+  another, the SSM scan its own (see ``repro.analysis.checker``);
+* **masked_ranks** — whether window pads are excluded from cross-ranks by
+  *index* (PR 2's rule: a pad tied with a real ``+inf`` / ``iinfo.max``
+  key must never steal its slot and surface a zero value).  Contracts
+  that carry values or ragged lengths MUST be masked; keys-only contracts
+  may use the cheaper unmasked form but then MUST state the
+  tie-then-stability justification in ``tie_safe``;
+* **pow2_tile** — the flat sort rounds require ``tile | 2 * width`` with
+  power-of-two widths, so the wrapper must *reject* a non-pow2 tile
+  loudly (the checker verifies the rejection actually happens);
+* **differentiable** — the wrapper defines a ``custom_vjp``; the checker
+  then also traces the backward abstractly and the AST lint (L005)
+  demands a registered gradient test.
+
+This module is deliberately dependency-free (no jax import): the
+annotations live on the hot dispatch surface (``kernels/ops.py``) and
+must cost nothing at import time.  All heavy lifting — abstract tracing,
+VMEM/prefetch models, the parameter lattice — lives in
+:mod:`repro.analysis.checker`, keyed by the facts declared here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+# Abstract models the checker knows how to apply.  "merge" covers the
+# tiled 1-D / batched / ragged merge kernels (scalar-prefetched start
+# tables, one (tile,) output block per grid step); "sort" the flat
+# bottom-up rounds (pow2 widths over a (m + tile,) buffer); "topk" the
+# flip-then-kv-sort reduction; "merge_k" the tournament over the ragged
+# batched kernel; "scan" the fused SSM scan.
+KINDS = ("merge", "sort", "topk", "merge_k", "scan")
+
+
+@dataclass(frozen=True)
+class KernelContract:
+    """Declared invariants of one kernel entry point (see module doc)."""
+
+    name: str
+    kind: str
+    fn: Any = field(default=None, repr=False, compare=False)
+    batched: bool = False
+    ragged: bool = False
+    carries_values: bool = False
+    masked_ranks: bool = False
+    pow2_tile: bool = False
+    differentiable: bool = False
+    # justification for an unmasked rank path (keys-only contracts only):
+    # why sentinel-tied real keys still merge bit-exactly
+    tie_safe: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown contract kind {self.kind!r} (expected one of {KINDS})")
+
+    def with_(self, **changes) -> "KernelContract":
+        """A modified copy — used by tests to build known-bad contracts."""
+        return replace(self, **changes)
+
+
+# name -> contract, populated at kernels import time by the decorator
+REGISTRY: Dict[str, KernelContract] = {}
+
+
+def kernel_contract(
+    *,
+    kind: str,
+    name: Optional[str] = None,
+    batched: bool = False,
+    ragged: bool = False,
+    carries_values: bool = False,
+    masked_ranks: bool = False,
+    pow2_tile: bool = False,
+    differentiable: bool = False,
+    tie_safe: Optional[str] = None,
+):
+    """Decorator: register the wrapped kernel entry point's contract.
+
+    Returns the function unchanged (works above ``jax.jit`` wrappers —
+    ``jit`` preserves ``__name__`` via ``functools.wraps``), so
+    annotating a wrapper costs nothing at call time.
+    """
+
+    def deco(fn):
+        cname = name or getattr(fn, "__name__", None)
+        if not cname:
+            raise ValueError("kernel_contract needs a name= for unnamed callables")
+        REGISTRY[cname] = KernelContract(
+            name=cname,
+            kind=kind,
+            fn=fn,
+            batched=batched,
+            ragged=ragged,
+            carries_values=carries_values,
+            masked_ranks=masked_ranks,
+            pow2_tile=pow2_tile,
+            differentiable=differentiable,
+            tie_safe=tie_safe,
+        )
+        return fn
+
+    return deco
+
+
+def registered_contracts() -> Dict[str, KernelContract]:
+    """Copy of the registry (import the kernel modules first — the
+    registry is populated by their decorators)."""
+    return dict(REGISTRY)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import dtypes as _jdtypes
 
+from repro.analysis.registry import kernel_contract
 from repro.core import batched as _bat
 from repro.core import merge_path as _mp
 from . import merge_path as _kern
@@ -85,6 +86,12 @@ _JIT = functools.partial(
 )
 
 
+@kernel_contract(
+    kind="merge",
+    tie_safe="keys-only: a window pad tied with a real sentinel-valued key "
+             "is bit-identical to it, so any rank assignment among the tie "
+             "yields the same output sequence",
+)
 @_JIT
 def merge(
     a: jax.Array,
@@ -105,6 +112,7 @@ def merge(
     )
 
 
+@kernel_contract(kind="merge", carries_values=True, masked_ranks=True)
 @_JIT
 def merge_kv(
     ak: jax.Array,
@@ -127,6 +135,12 @@ def merge_kv(
     )
 
 
+@kernel_contract(
+    kind="merge",
+    batched=True,
+    tie_safe="keys-only: sentinel-tied pads are value-identical to the real "
+             "key, so the merged row is unchanged whichever wins the tie",
+)
 @_JIT
 def merge_batched(
     a: jax.Array,
@@ -151,6 +165,7 @@ def merge_batched(
     )
 
 
+@kernel_contract(kind="merge", batched=True, carries_values=True, masked_ranks=True)
 @_JIT
 def merge_kv_batched(
     ak: jax.Array,
@@ -173,6 +188,7 @@ def merge_kv_batched(
     )
 
 
+@kernel_contract(kind="merge", batched=True, ragged=True, masked_ranks=True)
 @_JIT
 def merge_batched_ragged(
     a: jax.Array,
@@ -201,6 +217,9 @@ def merge_batched_ragged(
     )
 
 
+@kernel_contract(
+    kind="merge", batched=True, ragged=True, carries_values=True, masked_ranks=True
+)
 @_JIT
 def merge_kv_batched_ragged(
     ak: jax.Array,
@@ -354,6 +373,7 @@ def _scatter_inverse(perm: jax.Array, ct: jax.Array) -> jax.Array:
     return jnp.zeros(perm.shape, ct.dtype).at[rows, perm].set(ct)
 
 
+@kernel_contract(kind="sort", masked_ranks=True, pow2_tile=True, differentiable=True)
 @_JIT
 def sort(
     x: jax.Array,
@@ -397,6 +417,10 @@ def sort(
     return f(x)
 
 
+@kernel_contract(
+    kind="sort", carries_values=True, masked_ranks=True, pow2_tile=True,
+    differentiable=True,
+)
 @_JIT
 def sort_kv(
     keys: jax.Array,
@@ -440,6 +464,10 @@ def sort_kv(
     return f(keys, values)
 
 
+@kernel_contract(
+    kind="sort", batched=True, masked_ranks=True, pow2_tile=True,
+    differentiable=True,
+)
 @_JIT
 def sort_batched(
     x: jax.Array,
@@ -478,6 +506,10 @@ def sort_batched(
     return f(x)
 
 
+@kernel_contract(
+    kind="sort", batched=True, carries_values=True, masked_ranks=True,
+    pow2_tile=True, differentiable=True,
+)
 @_JIT
 def sort_kv_batched(
     keys: jax.Array,
@@ -521,6 +553,7 @@ def sort_kv_batched(
     return f(keys, values)
 
 
+@kernel_contract(kind="merge_k", ragged=True, masked_ranks=True)
 def merge_k(
     runs: jax.Array,
     lens: Optional[jax.Array] = None,
@@ -573,6 +606,10 @@ def merge_k(
     return stacked[0][: k * n]
 
 
+@kernel_contract(
+    kind="topk", batched=True, carries_values=True, masked_ranks=True,
+    pow2_tile=True, differentiable=True,
+)
 @functools.partial(
     jax.jit, static_argnames=("k", "tile", "leaf", "engine", "interpret")
 )
@@ -626,6 +663,10 @@ def topk_batched(
     return f(x)
 
 
+@kernel_contract(
+    kind="topk", batched=True, ragged=True, carries_values=True,
+    masked_ranks=True, pow2_tile=True, differentiable=True,
+)
 @functools.partial(
     jax.jit, static_argnames=("k", "tile", "leaf", "engine", "interpret")
 )

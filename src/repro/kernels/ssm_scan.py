@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.registry import kernel_contract
+
 from .merge_path import _interp
 
 
@@ -327,6 +329,7 @@ def _ssm_scan_bwd(chunk, d_tile, interpret, res, cts):
 _ssm_scan.defvjp(_ssm_scan_fwd, _ssm_scan_bwd)
 
 
+@kernel_contract(kind="scan", batched=True, differentiable=True)
 def ssm_scan_pallas(
     dt: jax.Array,  # (B, S, D)
     x: jax.Array,

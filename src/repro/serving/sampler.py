@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topk_batched, topk_batched_ragged
+from repro.core.merge_path import min_sentinel
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -101,7 +102,7 @@ def topk_sample(
     loglik = jnp.log(jnp.maximum(probs, 1e-30))
     # masked-vocab slots are -inf, not floor-probability: they can never be
     # drawn while any valid candidate exists (a lens==0 row returns -1)
-    loglik = jnp.where(idx >= 0, loglik, -jnp.inf)
+    loglik = jnp.where(idx >= 0, loglik, min_sentinel(loglik.dtype))
     choice = jax.random.categorical(key, loglik)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
 
@@ -127,6 +128,6 @@ def topp_sample(
     keep = cum - probs < p  # always keeps the first candidate
     probs = jnp.where(keep, probs, 0.0)
     loglik = jnp.log(jnp.maximum(probs, 1e-30))
-    loglik = jnp.where(idx >= 0, loglik, -jnp.inf)  # see topk_sample
+    loglik = jnp.where(idx >= 0, loglik, min_sentinel(loglik.dtype))  # see topk_sample
     choice = jax.random.categorical(key, loglik)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)

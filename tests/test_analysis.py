@@ -1,0 +1,308 @@
+"""The static checker checked: every shipped rule must fire on a known-bad
+fixture, and the real tree must pass clean.
+
+Engine 1 (abstract kernel analysis, ``repro.analysis``): rules are plain
+functions over explicit parameters, so the known-bad fixtures are just
+hostile configs/contracts — a tile that overflows the VMEM model, a
+padding model with the sentinel tail removed, a values-carrying contract
+claiming an unmasked rank path.
+
+Engine 2 (AST lint, ``tools/lint_rules.py``): the fixtures are source
+snippets — a literal ``interpret=True`` call site, ``-x`` on sort keys,
+raw ``iinfo`` sentinels, a loop-over-pairs kernel launch, an untested
+``custom_vjp``.
+
+Bench gate (``tools/bench_diff.py``): synthetic snapshot payloads with a
+>20% anchor regression, plus the graceful missing-baseline paths.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools import bench_diff, lint_rules  # noqa: E402
+
+from repro import analysis  # noqa: E402
+from repro.analysis import (  # noqa: E402
+    LatticeConfig,
+    Violation,
+    block_divisibility_violations,
+    check_kernels,
+    completeness_violations,
+    prefetch_violations,
+    registered_contracts,
+    rejection_violations,
+    sentinel_violations,
+    vmem_bytes,
+    vmem_violations,
+)
+
+# importing the kernel modules populates the registry
+import repro.kernels.ops  # noqa: E402,F401
+import repro.kernels.ssm_scan  # noqa: E402,F401
+
+CONTRACTS = registered_contracts()
+
+
+# ---------------------------------------------------------------------------
+# Engine 1: clean tree + every rule fires on a known-bad fixture
+# ---------------------------------------------------------------------------
+
+
+def test_clean_tree_passes_abstract_analysis():
+    # the repo's own contracts must prove out on the (fast) lattice —
+    # pure eval_shape tracing, zero device kernel launches
+    violations = check_kernels(fast=True)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_registry_covers_all_public_entry_points():
+    # 13 ops wrappers + the fused SSM scan
+    assert len(CONTRACTS) == 14
+    assert completeness_violations(CONTRACTS) == []
+
+
+def test_a000_fires_on_missing_annotation():
+    vs = completeness_violations(contracts={})
+    assert vs and all(v.rule == "A000" for v in vs)
+    assert any(v.kernel == "merge" for v in vs)
+    assert any(v.kernel == "ssm_scan_pallas" for v in vs)
+
+
+def test_a002_fires_on_non_pow2_sort_tile():
+    vs = block_divisibility_violations(CONTRACTS["sort"], LatticeConfig(n=4096, tile=384))
+    assert any(v.rule == "A002" and "power of two" in v.message for v in vs)
+
+
+def test_a002_fires_on_silently_accepted_bad_tile():
+    # ops.merge takes any tile, so a contract that CLAIMS pow2 rejection
+    # for it must be caught: eval_shape succeeds where a ValueError was due
+    bad = CONTRACTS["merge"].with_(pow2_tile=True)
+    vs = rejection_violations(bad, bad_tile=96)
+    assert any(v.rule == "A002" and "silently accepted" in v.message for v in vs)
+
+
+def test_a002_clean_on_real_sort_rejection():
+    # the real sort wrapper raises ValueError on a non-pow2 tile
+    assert rejection_violations(CONTRACTS["sort"], bad_tile=96) == []
+
+
+def test_a003_fires_when_sentinel_padding_removed():
+    # `_prepare` pads each buffer with `tile` sentinels; model a kernel
+    # that forgot them and the window reads run off the end
+    cfg = LatticeConfig(n=4096, tile=512)
+    vs = prefetch_violations(CONTRACTS["merge"], cfg, pad_elems=0)
+    assert any(v.rule == "A003" for v in vs)
+    # sort rounds over the flat buffer hit the same wall
+    vs = prefetch_violations(CONTRACTS["sort"], cfg, pad_elems=0)
+    assert any(v.rule == "A003" for v in vs)
+    # with the real tile-sized padding both are in bounds
+    assert prefetch_violations(CONTRACTS["merge"], cfg) == []
+    assert prefetch_violations(CONTRACTS["sort"], cfg) == []
+
+
+def test_a004_fires_on_unmasked_values_contract():
+    bad = CONTRACTS["merge_kv"].with_(masked_ranks=False)
+    vs = sentinel_violations(bad)
+    assert any(v.rule == "A004" and "UNMASKED" in v.message for v in vs)
+    # an unmasked keys-only contract without justification also fails
+    bad = CONTRACTS["merge"].with_(tie_safe=None)
+    assert any(v.rule == "A004" for v in sentinel_violations(bad))
+    # ...and the real contracts are fine
+    for c in CONTRACTS.values():
+        assert sentinel_violations(c) == []
+
+
+def test_a005_fires_on_vmem_overflowing_config():
+    # a 64Ki-wide matrix-engine tile models a (T, T) merge matrix of
+    # multiple GB — far past any device budget
+    cfg = LatticeConfig(tile=65536, engine="matrix")
+    vs = vmem_violations(CONTRACTS["merge"], cfg)
+    assert vs and all(v.rule == "A005" for v in vs)
+    # and against a custom (tiny) budget table even the default fits not
+    vs = vmem_violations(CONTRACTS["merge"], LatticeConfig(), budgets={"tiny": 1024})
+    assert any(v.rule == "A005" and "tiny" in v.message for v in vs)
+
+
+def test_a005_vmem_model_is_monotone_and_fits_defaults():
+    m = CONTRACTS["merge"]
+    small = vmem_bytes(m, LatticeConfig(tile=128, leaf=8))
+    big = vmem_bytes(m, LatticeConfig(tile=1024, leaf=32))
+    assert 0 < small < big
+    # the SSM backward slab dominates its forward
+    s = CONTRACTS["ssm_scan_pallas"]
+    fwd_only = s.with_(differentiable=False)
+    assert vmem_bytes(fwd_only, LatticeConfig()) < vmem_bytes(s, LatticeConfig())
+
+
+def test_violation_formatting():
+    v = Violation("A005", "merge", "tile=65536", "too big")
+    assert "A005" in str(v) and "merge" in str(v)
+
+
+# ---------------------------------------------------------------------------
+# Engine 2: AST lint rules
+# ---------------------------------------------------------------------------
+
+
+def _lint(src, path="src/repro/kernels/fixture.py", owners=None):
+    return lint_rules.lint_source(src, path, collect_vjp_owners=owners)
+
+
+def test_l001_fires_on_literal_interpret():
+    vs = _lint("merge_pallas(a, b, interpret=True)\n")
+    assert any(v.rule == "L001" for v in vs)
+    # routed through the resolver: clean
+    assert not any(
+        v.rule == "L001" for v in _lint("merge_pallas(a, b, interpret=_interp(flag))\n")
+    )
+
+
+def test_l002_fires_on_negated_sort_keys():
+    vs = _lint("out = ops.sort(-keys)\n")
+    assert any(v.rule == "L002" and "flip_desc" in v.message for v in vs)
+    # literal negative numbers are not key negations
+    assert not any(v.rule == "L002" for v in _lint("out = ops.topk_batched(x, -1)\n"))
+    # the sanctioned bit-flip form is clean
+    assert not any(v.rule == "L002" for v in _lint("out = ops.sort(~keys)\n"))
+
+
+def test_l003_fires_on_raw_sentinels_outside_helper():
+    for snippet in (
+        "pad = jnp.iinfo(jnp.int32).max\n",
+        "pad = np.finfo(x.dtype).max\n",
+        "pad = jnp.inf\n",
+    ):
+        vs = _lint(snippet, path="src/repro/serving/fixture.py")
+        assert any(v.rule == "L003" for v in vs), snippet
+    # the one sanctioned helper module is exempt
+    vs = _lint("pad = jnp.iinfo(jnp.int32).max\n", path="src/repro/core/merge_path.py")
+    assert not any(v.rule == "L003" for v in vs)
+
+
+def test_l004_fires_on_loop_over_pairs_kernel_launch():
+    snippet = (
+        "def rounds(pairs):\n"
+        "    for a, b in pairs:\n"
+        "        out = merge_pallas(a, b, tile=512)\n"
+    )
+    vs = _lint(snippet, path="src/repro/kernels/fixture.py")
+    assert any(v.rule == "L004" for v in vs)
+    # the same loop outside kernels/ (benchmarks, tests) is fine
+    assert not any(
+        v.rule == "L004" for v in _lint(snippet, path="src/repro/serving/fixture.py")
+    )
+
+
+def test_l005_fires_on_untested_custom_vjp():
+    snippet = (
+        "def mystery_op(x):\n"
+        "    @jax.custom_vjp\n"
+        "    def f(xx):\n"
+        "        return xx\n"
+        "    return f(x)\n"
+    )
+    owners = []
+    _lint(snippet, owners=owners)
+    assert owners == ["mystery_op"]
+    vs = lint_rules.vjp_pairing_violations(
+        [(o, "src/repro/kernels/fixture.py", 1) for o in owners],
+        grad_corpus="jax.grad of something_else",
+    )
+    assert any(v.rule == "L005" for v in vs)
+    # a corpus that exercises the (public) name passes; private
+    # underscored forwards are matched through their public name
+    assert lint_rules.vjp_pairing_violations(
+        [("_mystery_op", "f.py", 1)], "grad check for mystery_op"
+    ) == []
+
+
+def test_lint_suppression_comment():
+    vs = _lint("merge_pallas(a, b, interpret=True)  # lint: ok\n")
+    assert vs == []
+    vs = _lint("merge_pallas(a, b, interpret=True)  # lint: ok(L001)\n")
+    assert vs == []
+    # suppressing a DIFFERENT rule does not silence L001
+    vs = _lint("merge_pallas(a, b, interpret=True)  # lint: ok(L004)\n")
+    assert any(v.rule == "L001" for v in vs)
+
+
+def test_lint_clean_tree():
+    vs = lint_rules.lint_tree(REPO_ROOT)
+    assert vs == [], "\n".join(str(v) for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# Bench-diff perf gate
+# ---------------------------------------------------------------------------
+
+
+def _payload(us_spm=2800.0, us_batched=2500.0, bytes_dev=2984, smoke=True):
+    return {
+        "smoke": smoke,
+        "rows": [
+            {"name": "merge_throughput/pallas_spm_tile512/n=32768",
+             "us_per_call": us_spm, "derived": "11 Melem/s"},
+            {"name": "batched_merge/batched_pallas_2d_grid/B=32/n=512",
+             "us_per_call": us_batched, "derived": "6 Melem/s"},
+            {"name": "distributed/merge_window_n4096_p8",
+             "us_per_call": 9e6,  # wall-clock is subprocess noise, not gated
+             "derived": f"bytes/device={bytes_dev} total_bytes=16384"},
+        ],
+    }
+
+
+def test_bench_diff_fires_on_time_regression():
+    regs, _ = bench_diff.diff(_payload(), _payload(us_spm=2800 * 1.5))
+    assert len(regs) == 1 and "pallas_spm_tile512" in regs[0]
+
+
+def test_bench_diff_fires_on_bytes_regression():
+    regs, _ = bench_diff.diff(_payload(), _payload(bytes_dev=4000))
+    assert len(regs) == 1 and "bytes/device" in regs[0]
+
+
+def test_bench_diff_tolerates_noise_and_improvement():
+    regs, _ = bench_diff.diff(_payload(), _payload(us_spm=2800 * 1.15))
+    assert regs == []
+    # the distributed row's wall-clock is ignored entirely — only bytes gate
+    regs, _ = bench_diff.diff(_payload(), _payload(us_batched=1000.0))
+    assert regs == []
+
+
+def test_bench_diff_skips_mismatched_smoke_flags():
+    regs, notes = bench_diff.diff(_payload(), _payload(us_spm=9999.0, smoke=False))
+    assert regs == [] and any("smoke" in n for n in notes)
+
+
+def test_bench_diff_missing_baseline_is_graceful(tmp_path):
+    assert bench_diff.check(tmp_path) == 0  # zero snapshots
+    (tmp_path / "BENCH_1.json").write_text(json.dumps(_payload()))
+    assert bench_diff.check(tmp_path) == 0  # one snapshot
+    # an anchor missing on one side is skipped, not failed
+    cur = _payload()
+    cur["rows"] = cur["rows"][:1]
+    (tmp_path / "BENCH_2.json").write_text(json.dumps(cur))
+    assert bench_diff.check(tmp_path) == 0
+
+
+def test_bench_diff_check_fails_on_regressed_snapshot(tmp_path):
+    (tmp_path / "BENCH_1.json").write_text(json.dumps(_payload()))
+    (tmp_path / "BENCH_2.json").write_text(json.dumps(_payload(us_spm=9000.0)))
+    assert bench_diff.check(tmp_path) == 1
+
+
+def test_bench_diff_next_name(tmp_path):
+    assert bench_diff.next_name(tmp_path) == "BENCH_1.json"
+    (tmp_path / "BENCH_3.json").write_text("{}")
+    (tmp_path / "BENCH_10.json").write_text("{}")
+    assert bench_diff.next_name(tmp_path) == "BENCH_11.json"
+    # the repo itself has snapshots, so the derived name advances them
+    n = int(bench_diff.next_name(REPO_ROOT).split("_")[1].split(".")[0])
+    assert n >= 6

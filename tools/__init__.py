@@ -1,0 +1,6 @@
+"""Repo tooling (docs coverage gate, AST lint, bench-diff perf gate).
+
+A package so in-repo scripts (``benchmarks/run.py``) can import the
+anchor-row definitions from ``tools.bench_diff`` instead of duplicating
+them; every module here also runs standalone (``python tools/<x>.py``).
+"""

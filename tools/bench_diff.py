@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the ``BENCH_<n>.json`` trajectory.
+
+``make ci`` records one smoke-benchmark snapshot per PR (the 0.2 -> ~12
+Melem/s trajectory in the repo root).  This tool closes the ROADMAP's
+"perf-regression gate" item:
+
+* ``--check`` compares the two most recent snapshots' **anchor rows**
+  and fails (exit 1) on a >20% regression in any of them:
+
+  - ``merge_throughput/pallas_spm_tile512`` — the headline single-merge
+    throughput (time anchor);
+  - ``batched_merge/batched_pallas_2d_grid`` — the batched 2-D grid
+    anchor (time anchor);
+  - ``distributed/merge_window`` — compared on the **deterministic**
+    ``bytes/device`` count parsed from the derived column, because the
+    row's wall-clock includes multi-process startup noise.
+
+  Missing baseline (fewer than two snapshots, or an anchor row absent
+  from either side) is handled gracefully: report and exit 0 — the gate
+  must not brick the first run.
+
+* ``--next`` prints the snapshot name the *current* ``make ci`` run
+  should write: highest existing ``BENCH_<n>.json`` + 1.  The Makefile
+  derives ``BENCH_JSON`` from this, so PRs can't forget the bump.
+
+Non-anchor rows are intentionally ignored: smoke-mode timings of the
+small paper tables are too noisy to gate on, while the anchors run big
+enough problems to be stable between runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+THRESHOLD = 0.20  # fail on >20% regression in an anchor row
+
+# (name substring, metric): "time" gates on us_per_call going UP,
+# "bytes" on the derived bytes/device count going UP
+ANCHORS: Tuple[Tuple[str, str], ...] = (
+    ("merge_throughput/pallas_spm_tile512", "time"),
+    ("batched_merge/batched_pallas_2d_grid", "time"),
+    ("distributed/merge_window", "bytes"),
+)
+
+_BYTES = re.compile(r"bytes/device=(\d+)")
+_SNAP = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def snapshots(root: Optional[Path] = None) -> List[Tuple[int, Path]]:
+    """Existing ``(n, path)`` snapshots, ascending by n."""
+    root = REPO_ROOT if root is None else Path(root)
+    out = []
+    for p in root.glob("BENCH_*.json"):
+        m = _SNAP.match(p.name)
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+def next_name(root: Optional[Path] = None) -> str:
+    """Snapshot name the current CI run should write (highest + 1)."""
+    snaps = snapshots(root)
+    return f"BENCH_{snaps[-1][0] + 1 if snaps else 1}.json"
+
+
+def anchor_values(payload: dict) -> Dict[str, Tuple[str, float]]:
+    """Anchor rows of one snapshot: row name -> (metric, value)."""
+    out: Dict[str, Tuple[str, float]] = {}
+    for row in payload.get("rows", []):
+        name = row.get("name", "")
+        for pat, metric in ANCHORS:
+            if pat in name:
+                if metric == "bytes":
+                    m = _BYTES.search(str(row.get("derived", "")))
+                    if m:
+                        out[name] = ("bytes", float(m.group(1)))
+                else:
+                    out[name] = ("time", float(row["us_per_call"]))
+                break
+    return out
+
+
+def diff(
+    base: dict, current: dict, threshold: float = THRESHOLD
+) -> Tuple[List[str], List[str]]:
+    """Compare anchor rows; return (regressions, notes)."""
+    regressions, notes = [], []
+    if bool(base.get("smoke")) != bool(current.get("smoke")):
+        notes.append("smoke flags differ between snapshots — skipping diff")
+        return regressions, notes
+    b, c = anchor_values(base), anchor_values(current)
+    for name in sorted(set(b) | set(c)):
+        if name not in b or name not in c:
+            side = "baseline" if name not in b else "current"
+            notes.append(f"anchor {name!r} missing from the {side} snapshot — skipped")
+            continue
+        metric, bv = b[name]
+        _, cv = c[name]
+        if bv <= 0:
+            notes.append(f"anchor {name!r} has non-positive baseline — skipped")
+            continue
+        ratio = cv / bv - 1.0
+        unit = "us/call" if metric == "time" else "bytes/device"
+        if ratio > threshold:
+            regressions.append(
+                f"{name}: {bv:.0f} -> {cv:.0f} {unit} "
+                f"(+{ratio:.0%} > {threshold:.0%} threshold)"
+            )
+        else:
+            notes.append(f"{name}: {bv:.0f} -> {cv:.0f} {unit} ({ratio:+.0%}) OK")
+    if not (set(b) & set(c)):
+        notes.append("no anchor rows common to both snapshots")
+    return regressions, notes
+
+
+def check(root: Optional[Path] = None, threshold: float = THRESHOLD) -> int:
+    snaps = snapshots(root)
+    if len(snaps) < 2:
+        print(f"bench-diff: {len(snaps)} snapshot(s) found — no baseline yet, OK")
+        return 0
+    (bn, bp), (cn, cp) = snaps[-2], snaps[-1]
+    base = json.loads(bp.read_text())
+    current = json.loads(cp.read_text())
+    regressions, notes = diff(base, current, threshold)
+    for note in notes:
+        print(f"bench-diff: {note}")
+    if regressions:
+        for r in regressions:
+            print(f"bench-diff: REGRESSION {bp.name} -> {cp.name}: {r}",
+                  file=sys.stderr)
+        return 1
+    print(f"bench-diff: OK ({bp.name} -> {cp.name})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--next", action="store_true",
+                    help="print the BENCH_<n>.json name the current run should write")
+    ap.add_argument("--check", action="store_true",
+                    help="diff the two most recent snapshots' anchor rows")
+    ap.add_argument("--root", default=str(REPO_ROOT),
+                    help="directory holding the BENCH_*.json snapshots")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD,
+                    help="fractional regression that fails the gate")
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+    if args.next:
+        print(next_name(root))
+        return 0
+    return check(root, args.threshold)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,8 @@ Public surface checked:
 
 * every name in ``repro.core.__all__`` (the library's primary boundary);
 * every public function defined in ``repro.kernels.ops`` (the kernel
-  dispatch surface), plus its documented module-level switches.
+  dispatch surface), plus its documented module-level switches;
+* every name in ``repro.analysis.__all__`` (the static checker's surface).
 
 Wired to ``make docs-check`` (and ``make ci``), so a PR that adds a public
 symbol without documenting it in the architecture page fails CI.  The
@@ -28,6 +29,7 @@ DOC = os.path.join(ROOT, "docs", "architecture.md")
 
 def public_symbols() -> dict:
     """Map of ``module -> sorted public symbol names`` to require."""
+    import repro.analysis as analysis
     import repro.core as core
     import repro.kernels.ops as ops
 
@@ -42,6 +44,7 @@ def public_symbols() -> dict:
     return {
         "repro.core": sorted(core.__all__),
         "repro.kernels.ops": ops_names,
+        "repro.analysis": sorted(analysis.__all__),
     }
 
 
