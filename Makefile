@@ -7,14 +7,24 @@ PY ?= python
 # highest existing BENCH_<n>.json + 1, so PRs can't forget the bump
 BENCH_JSON ?= $(shell $(PY) tools/bench_diff.py --next)
 
-.PHONY: test bench-smoke bench lint check ci docs-check train-smoke
+.PHONY: test test-faults bench-smoke bench lint check ci docs-check train-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# docs coverage gate: every public repro.core / repro.kernels.ops symbol
-# must appear in docs/architecture.md
+# fault-injection sweep: the fuzz tests in tests/test_faults.py run every
+# guarded fallback edge, then the same suite re-runs under an env-driven
+# plan (REPRO_FAULTS) so the degraded paths are exercised end to end the
+# way production would hit them
+test-faults:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_faults.py
+	PYTHONPATH=src REPRO_FAULTS="launch:merge:0;launch:sort:0;exchange:distributed_merge:0:window" \
+		$(PY) -m pytest -x -q tests/test_faults.py -k env_plan
+
+# docs coverage gate: every public repro.core / repro.kernels.ops /
+# repro.runtime symbol must appear in docs/architecture.md or
+# docs/robustness.md
 docs-check:
 	PYTHONPATH=src $(PY) tools/docs_check.py
 
@@ -32,10 +42,11 @@ check:
 	$(PY) tools/bench_diff.py --check
 
 # full CI: static analysis first (contract violations fail fast, no
-# kernels run), then tier-1 tests + docs gate + kernel-path train step +
-# smoke benchmarks recording the perf point, then the bench-diff gate
-# re-checks the fresh snapshot against the previous PR's
-ci: check test docs-check train-smoke
+# kernels run), then tier-1 tests + fault-injection sweep + docs gate +
+# kernel-path train step + smoke benchmarks recording the perf point
+# (benchmarks/run.py fails if any fallback fired on the clean tree), then
+# the bench-diff gate re-checks the fresh snapshot against the previous PR's
+ci: check test test-faults docs-check train-smoke
 	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
 	$(PY) tools/bench_diff.py --check
 

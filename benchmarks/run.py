@@ -62,11 +62,40 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+
+    # Guarded-dispatch health: a benchmark run that silently degraded
+    # (e.g. every pallas launch fell back to core) would report numbers
+    # for the wrong code path — surface the counters and fail loudly.
+    from repro.runtime import faults as _faults
+    from repro.runtime import resilience as _res
+
+    health = _res.health_summary()
+    totals = health["totals"]
+    print(
+        f"# health: calls={totals['calls']} fallbacks={totals['fallbacks']} "
+        f"preflight_rejects={totals['precondition_rejects']} "
+        f"launch_failures={totals['launch_failures']} "
+        f"verify_failures={totals['verify_failures']} "
+        f"exhausted={totals['exhausted']}",
+        file=sys.stderr,
+    )
+    for op, rec in sorted(health.items()):
+        if op != "totals" and rec["fallbacks"]:
+            print(f"# health[{op}]: fallback_edges={rec['fallback_edges']}", file=sys.stderr)
+    if totals["fallbacks"] and not _faults.active():
+        print(
+            f"# health: FAIL — {totals['fallbacks']} fallback(s) taken with no "
+            f"fault plan active; benchmark numbers describe degraded paths",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
     if args.json:
         payload = {
             "smoke": bool(args.smoke),
             "only": args.only,
             "total_seconds": round(total_s, 1),
+            "health": health,
             "rows": rows,
         }
         # record the perf-gate anchor rows explicitly so a snapshot is

@@ -46,7 +46,7 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .merge_path import bisect_steps, flip_desc, max_sentinel, min_sentinel
+from .merge_path import bisect_steps, flip_desc, max_sentinel, min_sentinel, total_order_keys
 
 __all__ = [
     "searchsorted_batched",
@@ -407,6 +407,16 @@ def merge_sort_batched_ragged(x: jax.Array, lens) -> jax.Array:
     """
     bsz, n = x.shape
     lens = _as_lens(lens, bsz, n)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        # NaN-deterministic route: mask pads in int total-order key space,
+        # where the pad sentinel (iinfo.max) is *strictly* above every real
+        # key — including NaN (canonical-NaN bits) and real +inf — so NaN
+        # keys sort to the end of the valid prefix, never into the tail.
+        tok = total_order_keys(x)
+        tok = _mask_rows(tok, lens, max_sentinel(tok.dtype))
+        _, out = merge_sort_kv_batched(tok, x)
+        col = jnp.arange(n, dtype=jnp.int32)[None, :]
+        return jnp.where(col < lens[:, None], out, max_sentinel(x.dtype))
     return merge_sort_batched(_mask_rows(x, lens, max_sentinel(x.dtype)))
 
 
@@ -422,6 +432,18 @@ def merge_sort_kv_batched_ragged(
     """
     bsz, n = keys.shape
     lens = _as_lens(lens, bsz, n)
+    if jnp.issubdtype(keys.dtype, jnp.floating):
+        # see merge_sort_batched_ragged: pads are masked in int total-order
+        # key space so NaN keys stay inside the valid prefix (sorted last)
+        tok = total_order_keys(keys)
+        tok = _mask_rows(tok, lens, max_sentinel(tok.dtype))
+        idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+        _, perm = merge_sort_kv_batched(tok, idx)
+        rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+        ks = keys[rows, perm]
+        col = jnp.arange(n, dtype=jnp.int32)[None, :]
+        ks = jnp.where(col < lens[:, None], ks, max_sentinel(keys.dtype))
+        return ks, values[rows, perm]
     return merge_sort_kv_batched(
         _mask_rows(keys, lens, max_sentinel(keys.dtype)), values
     )
@@ -478,10 +500,20 @@ def merge_sort_batched(x: jax.Array) -> jax.Array:
     :func:`merge_batched` call — batch and pair axes are flattened
     together, so the vector utilization is independent of where we are in
     the round schedule.
+
+    Float rows route through :func:`repro.core.merge_path.total_order_keys`
+    — the merge network compares same-width int keys while the float
+    payload rides along as the value — so NaN keys sort last,
+    deterministically, instead of poisoning the ``<=`` comparisons.  For
+    NaN-free input the int key order coincides with the float order and
+    the result is bit-identical to sorting the floats directly.
     """
     bsz, n = x.shape
     if n <= 1:
         return x
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        _, out = merge_sort_kv_batched(total_order_keys(x), x)
+        return out
     xp = _pad_rows_pow2(x, max_sentinel(x.dtype))
     m = xp.shape[1]
     width = 1
@@ -498,10 +530,21 @@ def merge_sort_kv_batched(keys: jax.Array, values: jax.Array) -> Tuple[jax.Array
     Stability is inherited from the A-priority pairwise merge, making this
     the batched form of the dispatch sort MoE relies on for deterministic
     capacity drops.
+
+    Float keys take the NaN-deterministic route: the permutation is
+    computed by kv-sorting the int :func:`total_order_keys` of the keys
+    (NaN last), then both keys and values are gathered through it — the
+    output keys are the *original* float bit patterns in sorted order.
+    Bit-identical to the direct float sort whenever no key is NaN.
     """
     bsz, n = keys.shape
     if n <= 1:
         return keys, values
+    if jnp.issubdtype(keys.dtype, jnp.floating):
+        idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+        _, perm = merge_sort_kv_batched(total_order_keys(keys), idx)
+        rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+        return keys[rows, perm], values[rows, perm]
     kp = _pad_rows_pow2(keys, max_sentinel(keys.dtype))
     vp = _pad_rows_pow2(values, jnp.zeros((), values.dtype))
     m = kp.shape[1]

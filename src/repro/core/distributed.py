@@ -45,6 +45,17 @@ Primitives:
   elements moved per device) or an all_gather of the P candidate runs
   (``exchange="gather"``, P·k per device) merged by ``merge_k_kv``.
   Used for vocab-sharded sampling in serving.
+
+Self-healing: every public wrapper routes its *eager* calls through
+``repro.runtime.resilience.guarded_call`` with always-on output
+verification (the distributed perf anchor gates exchanged bytes, so the
+host-side check is free w.r.t. CI): merges degrade
+``window -> gather -> core-resort``, the sample sort escalates capacity
+(``sample -> capacity-2x -> core-resort``; escalation changes the padded
+output shape — slice by the returned counts), and top-k degrades
+``butterfly -> gather -> core-topk``.  Traced calls (inside ``jit`` or a
+caller's ``shard_map``) bypass the guard: a per-device divergent fallback
+would deadlock the collectives.
 """
 
 from __future__ import annotations
@@ -95,6 +106,8 @@ from .batched import (
     merge_k_kv,
     merge_k_onepass,
     merge_kv_batched,
+    merge_sort_batched,
+    merge_sort_kv_batched,
     topk_batched,
 )
 from .merge_path import (
@@ -103,8 +116,18 @@ from .merge_path import (
     flip_desc,
     max_sentinel,
     merge_sort,
+    merge_sort_kv,
+    total_order_keys,
 )
 from .segmented import _masked_window_ranks
+
+# Module-form imports (not ``from repro.runtime import ...``): the runtime
+# package imports ``repro.core`` back, so during a cycle only the
+# sys.modules entries exist — binding the (possibly still-initialising)
+# module objects here and deferring attribute access to call time keeps
+# both import orders working.
+import repro.runtime.faults as _faults
+import repro.runtime.resilience as _res
 
 
 # ---------------------------------------------------------------------------
@@ -447,6 +470,65 @@ def _distributed_merge_impl(ak, av, bk, bv, mesh, axis, exchange):
     return fn(ak, bk)[:, : na + nb], None
 
 
+# ---------------------------------------------------------------------------
+# guarded dispatch (window -> gather -> core-resort)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _resort_rows(ak, bk):
+    """Terminal merge fallback: total-order re-sort of the concatenation
+    (stable sort of ``[A; B]`` == the stable A-priority merge)."""
+    return merge_sort_batched(jnp.concatenate([ak, bk], axis=-1))
+
+
+@jax.jit
+def _resort_rows_kv(ak, av, bk, bv):
+    return merge_sort_kv_batched(
+        jnp.concatenate([ak, bk], axis=-1), jnp.concatenate([av, bv], axis=-1)
+    )
+
+
+def _resort_merge(ak, av, bk, bv):
+    if av is None:
+        return _resort_rows(ak, bk), None
+    return _resort_rows_kv(ak, av, bk, bv)
+
+
+def _guarded_merge(op, ak, av, bk, bv, mesh, axis, exchange):
+    """Route one distributed merge through the guard.
+
+    Attempt chain: the requested exchange, then ``gather`` (the all-gather
+    oracle), then ``core-resort`` — a single-process total-order re-sort of
+    the concatenation, which survives even NaN-laced (unsorted) inputs.
+    Verification is always on here (tok-space sortedness of the trimmed
+    keys): the distributed perf anchor gates exchanged *bytes*, not
+    wall-clock, so the host-side check cannot regress CI.  Under tracing
+    (the wrappers inside ``jit``/``grad``) the guard bypasses to the
+    requested exchange — Python cannot branch on device failures there, and
+    a per-device divergent fallback would deadlock the collectives.
+    """
+    if exchange not in ("window", "gather"):
+        raise ValueError(f"exchange must be 'window' or 'gather', got {exchange!r}")
+    args = (ak, bk) if av is None else (ak, av, bk, bv)
+    if not _res.guard_enabled() or _res.is_tracing(*args):
+        return _distributed_merge_impl(ak, av, bk, bv, mesh, axis, exchange)
+    idx = _faults.next_index(op)
+    if av is None:
+        ak, bk = _faults.maybe_nan_lace(op, idx, (ak, bk), (0, 1))
+    else:
+        ak, av, bk, bv = _faults.maybe_nan_lace(op, idx, (ak, av, bk, bv), (0, 2))
+
+    def run(ex):
+        return lambda: _distributed_merge_impl(ak, av, bk, bv, mesh, axis, ex)
+
+    attempts = [("window", run("window"))] if exchange == "window" else []
+    attempts.append(("gather", run("gather")))
+    attempts.append(("core-resort", lambda: _resort_merge(ak, av, bk, bv)))
+    return _res.guarded_call(
+        op, attempts, index=idx, verifier=_res.sorted_verifier(), verify=True
+    )
+
+
 def distributed_merge(
     a: jax.Array,
     b: jax.Array,
@@ -462,8 +544,14 @@ def distributed_merge(
     by the axis size: inputs are sentinel-padded up to the next multiple
     (so each device holds an equal shard), merged length-aware (the pads
     are excluded by count, never by value comparison), and trimmed.
+
+    Eager calls are guarded: a failed or corrupted exchange degrades
+    ``window -> gather -> core-resort`` with a :class:`FallbackWarning`
+    and health counters (see :mod:`repro.runtime.resilience`).
     """
-    keys, _ = _distributed_merge_impl(a[None, :], None, b[None, :], None, mesh, axis, exchange)
+    keys, _ = _guarded_merge(
+        "distributed_merge", a[None, :], None, b[None, :], None, mesh, axis, exchange
+    )
     return keys[0]
 
 
@@ -479,14 +567,22 @@ def distributed_merge_kv(
     """Stable key-value merge of two sorted (keys, values) arrays sharded
     over a 1-D mesh axis; values ride the same window exchange as keys.
     Safe for payload keys equal to the sentinel (ranks are length-masked,
-    so a shard pad can never shadow a real ``+inf``/``iinfo.max`` key)."""
+    so a shard pad can never shadow a real ``+inf``/``iinfo.max`` key).
+    Guarded like :func:`distributed_merge`."""
     if av.shape != ak.shape or bv.shape != bk.shape:
         raise ValueError(
             f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
             f"values {av.shape}/{bv.shape}"
         )
-    keys, vals = _distributed_merge_impl(
-        ak[None, :], av[None, :], bk[None, :], bv[None, :], mesh, axis, exchange
+    keys, vals = _guarded_merge(
+        "distributed_merge_kv",
+        ak[None, :],
+        av[None, :],
+        bk[None, :],
+        bv[None, :],
+        mesh,
+        axis,
+        exchange,
     )
     return keys[0], vals[0]
 
@@ -501,8 +597,9 @@ def distributed_merge_batched(
     """Batched :func:`distributed_merge`: ``(R, na) + (R, nb) -> (R, na+nb)``
     with rows replicated and the merge axis sharded.  Every row has its own
     cut table (the collective bisection carries the batch in its lanes),
-    but all rows share the same two all_to_alls."""
-    keys, _ = _distributed_merge_impl(a, None, b, None, mesh, axis, exchange)
+    but all rows share the same two all_to_alls.  Guarded like
+    :func:`distributed_merge`."""
+    keys, _ = _guarded_merge("distributed_merge_batched", a, None, b, None, mesh, axis, exchange)
     return keys
 
 
@@ -516,13 +613,14 @@ def distributed_merge_kv_batched(
     exchange: str = "window",
 ) -> Tuple[jax.Array, jax.Array]:
     """Batched :func:`distributed_merge_kv` (leading batch axis replicated,
-    merge axis sharded) — the vocab-sharded serving building block."""
+    merge axis sharded) — the vocab-sharded serving building block.
+    Guarded like :func:`distributed_merge`."""
     if av.shape != ak.shape or bv.shape != bk.shape:
         raise ValueError(
             f"value shapes must match key shapes: keys {ak.shape}/{bk.shape}, "
             f"values {av.shape}/{bv.shape}"
         )
-    return _distributed_merge_impl(ak, av, bk, bv, mesh, axis, exchange)
+    return _guarded_merge("distributed_merge_kv_batched", ak, av, bk, bv, mesh, axis, exchange)
 
 
 def distributed_merge_local(a_shard: jax.Array, b_shard: jax.Array, axis_name: str) -> jax.Array:
@@ -667,6 +765,44 @@ def distributed_sort_local(
     return out, count[None], overflow
 
 
+@jax.jit
+def _resort_sort(x):
+    """Terminal sample-sort fallback: single-process total-order sort."""
+    _, out = merge_sort_kv(total_order_keys(x), x)
+    return out
+
+
+def _dsort_verifier(n: int):
+    """Verifier for the sample sort's ``(sorted_padded, counts, overflow)``.
+
+    Rejects when the global overflow flag is set (elements were dropped),
+    when the valid counts do not sum to ``n``, or when the concatenation of
+    the per-bucket valid prefixes is not globally nondecreasing in
+    total-order space.  Comparisons, not diffs (int64 extremes wrap).
+    """
+
+    def check(out):
+        s, counts, overflow = out
+        if bool(np.asarray(overflow)):
+            return "bucket overflow (capacity exceeded)"
+        counts_np = np.asarray(counts, dtype=np.int64).reshape(-1)
+        total = int(counts_np.sum())
+        if total != n:
+            return f"valid count {total} != n={n}"
+        s_np = np.asarray(s)
+        p = counts_np.size
+        cap = s_np.shape[0] // p
+        rows = s_np.reshape(p, cap)
+        valid = np.concatenate([rows[i, : counts_np[i]] for i in range(p)])
+        if valid.size >= 2:
+            tok = np.asarray(total_order_keys(jnp.asarray(valid))).astype(np.int64)
+            if not bool(np.all(tok[:-1] <= tok[1:])):
+                return "valid prefixes not globally nondecreasing in total-order space"
+        return None
+
+    return check
+
+
 def distributed_sort(
     x: jax.Array,
     mesh: Mesh | None = None,
@@ -675,23 +811,54 @@ def distributed_sort(
     local_sort: str = "core",
     combine: str = "onepass",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Sample-sort a sharded array; see :func:`distributed_sort_local`."""
+    """Sample-sort a sharded array; see :func:`distributed_sort_local`.
+
+    Eager calls are guarded: attempt 1 runs the requested configuration;
+    a launch failure, a corrupted exchange, or a bucket *overflow* (the
+    capacity verifier treats ``overflowed=True`` as a failed attempt)
+    escalates to ``capacity-2x`` — the same sort at twice the capacity
+    factor — and finally to ``core-resort``, a single-process total-order
+    sort (counts shape ``(1,)``, capacity ``n``).  Escalation therefore
+    **changes the padded output shape**; callers consuming the guarded
+    wrapper must slice by the returned counts rather than assume the
+    requested capacity.  Under tracing the requested configuration runs
+    unguarded (collective-safe).
+    """
     if mesh is None:
         mesh = Mesh(jax.devices(), (axis,))
-    fn = shard_map(
-        functools.partial(
-            distributed_sort_local,
-            axis_name=axis,
-            capacity_factor=capacity_factor,
-            local_sort=local_sort,
-            combine=combine,
+
+    def run(cf):
+        fn = shard_map(
+            functools.partial(
+                distributed_sort_local,
+                axis_name=axis,
+                capacity_factor=cf,
+                local_sort=local_sort,
+                combine=combine,
+            ),
+            mesh=mesh,
+            in_specs=(P(axis),),
+            out_specs=(P(axis), P(axis), P()),
+            check_vma=False,
+        )
+        return fn(x)
+
+    if not _res.guard_enabled() or _res.is_tracing(x):
+        return run(capacity_factor)
+    idx = _faults.next_index("distributed_sort")
+    (x,) = _faults.maybe_nan_lace("distributed_sort", idx, (x,), (0,))
+    n = int(x.shape[0])
+    attempts = [
+        ("sample", lambda: run(capacity_factor)),
+        ("capacity-2x", lambda: run(2.0 * capacity_factor)),
+        (
+            "core-resort",
+            lambda: (_resort_sort(x), jnp.full((1,), n, jnp.int32), jnp.zeros((), jnp.bool_)),
         ),
-        mesh=mesh,
-        in_specs=(P(axis),),
-        out_specs=(P(axis), P(axis), P()),
-        check_vma=False,
+    ]
+    return _res.guarded_call(
+        "distributed_sort", attempts, index=idx, verifier=_dsort_verifier(n), verify=True
     )
-    return fn(x)
 
 
 # ---------------------------------------------------------------------------
@@ -788,21 +955,44 @@ def distributed_topk(
     (``k * log2(P)`` candidates moved per device) when the axis size is a
     power of two, else the all_gather tree (``P * k`` per device).  Both
     are bit-identical — same bracket, same tie-breaks.
+
+    Eager calls are guarded: a failed butterfly degrades to ``gather``,
+    and both degrade to ``core-topk`` — the single-process batched
+    merge-path top-k, which is NaN-exact via the total-order key route.
     """
     if mesh is None:
         mesh = Mesh(jax.devices(), (axis,))
     p = mesh.shape[axis]
     exchange = _resolve_topk_exchange(exchange, p)
-    fn = shard_map(
-        functools.partial(
-            _topk_local_body, k=k, axis_name=axis, p=p, exchange=exchange, batched=False
-        ),
-        mesh=mesh,
-        in_specs=(P(axis),),
-        out_specs=(P(), P()),
-        check_vma=False,
+
+    def run(ex):
+        fn = shard_map(
+            functools.partial(
+                _topk_local_body, k=k, axis_name=axis, p=p, exchange=ex, batched=False
+            ),
+            mesh=mesh,
+            in_specs=(P(axis),),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(x)
+
+    if not _res.guard_enabled() or _res.is_tracing(x):
+        return run(exchange)
+    idx = _faults.next_index("distributed_topk")
+    (x,) = _faults.maybe_nan_lace("distributed_topk", idx, (x,), (0,))
+
+    def core():
+        v, i = topk_batched(x[None, :], k)
+        return v[0], i[0].astype(jnp.int32)
+
+    attempts = [(exchange, lambda: run(exchange))]
+    if exchange != "gather":
+        attempts.append(("gather", lambda: run("gather")))
+    attempts.append(("core-topk", core))
+    return _res.guarded_call(
+        "distributed_topk", attempts, index=idx, verifier=_res.topk_verifier(), verify=True
     )
-    return fn(x)
 
 
 def distributed_topk_batched(
@@ -819,19 +1009,43 @@ def distributed_topk_batched(
     :func:`distributed_topk`), and the replicated ``(R, k)`` result feeds
     the samplers directly (``repro.serving.sampler`` ``backend=
     "distributed"``).  Indices are global vocab ids; tie-breaking matches
-    ``jax.lax.top_k`` (smallest index first).
+    ``jax.lax.top_k`` (smallest index first).  Guarded like
+    :func:`distributed_topk`.
     """
     if mesh is None:
         mesh = Mesh(jax.devices(), (axis,))
     p = mesh.shape[axis]
     exchange = _resolve_topk_exchange(exchange, p)
-    fn = shard_map(
-        functools.partial(
-            _topk_local_body, k=k, axis_name=axis, p=p, exchange=exchange, batched=True
-        ),
-        mesh=mesh,
-        in_specs=(P(None, axis),),
-        out_specs=(P(), P()),
-        check_vma=False,
+
+    def run(ex):
+        fn = shard_map(
+            functools.partial(
+                _topk_local_body, k=k, axis_name=axis, p=p, exchange=ex, batched=True
+            ),
+            mesh=mesh,
+            in_specs=(P(None, axis),),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(x)
+
+    if not _res.guard_enabled() or _res.is_tracing(x):
+        return run(exchange)
+    idx = _faults.next_index("distributed_topk_batched")
+    (x,) = _faults.maybe_nan_lace("distributed_topk_batched", idx, (x,), (0,))
+
+    def core():
+        v, i = topk_batched(x, k)
+        return v, i.astype(jnp.int32)
+
+    attempts = [(exchange, lambda: run(exchange))]
+    if exchange != "gather":
+        attempts.append(("gather", lambda: run("gather")))
+    attempts.append(("core-topk", core))
+    return _res.guarded_call(
+        "distributed_topk_batched",
+        attempts,
+        index=idx,
+        verifier=_res.topk_verifier(),
+        verify=True,
     )
-    return fn(x)

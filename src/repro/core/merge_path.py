@@ -32,6 +32,7 @@ __all__ = [
     "max_sentinel",
     "min_sentinel",
     "flip_desc",
+    "total_order_keys",
     "bisect_steps",
     "diagonal_intersections",
     "merge",
@@ -87,6 +88,45 @@ def flip_desc(x: jax.Array) -> jax.Array:
     if jnp.issubdtype(x.dtype, jnp.floating):
         return -x
     return ~x
+
+
+def total_order_keys(x: jax.Array) -> jax.Array:
+    """IEEE-754 total-order key transform: comparable keys for float arrays.
+
+    NaN keys break ``<=`` comparisons nondeterministically — every engine
+    (searchsorted core, Pallas hier/matrix, distributed window exchange)
+    may disagree on where an unordered element lands.  This transform maps
+    floats to same-width *signed ints* whose int order is a total order
+    refining the float order:
+
+    1. canonicalize: ``-0.0 -> +0.0`` and every NaN (any sign/payload) to
+       the canonical quiet NaN, so equal-comparing floats get equal keys;
+    2. bitcast to the same-width signed int ``i``;
+    3. ``key = i`` for nonnegative floats, ``key = iinfo.min ^ ~i`` for
+       negative ones — a monotone flip of the negative range.
+
+    Resulting order: ``-inf < ... < -0.0 == +0.0 < ... < +inf < NaN``
+    (the canonical NaN bit pattern, e.g. ``0x7FC00000`` for f32, exceeds
+    the ``+inf`` pattern ``0x7F800000``).  **NaN sorts last,
+    deterministically, on every engine.**  All keys are strictly inside
+    ``(iinfo.min, iinfo.max)``, so the int ``min_sentinel``/``max_sentinel``
+    still strictly bracket every real key.
+
+    Non-float inputs are returned unchanged (int orders are already
+    total).  The input is wrapped in ``stop_gradient``: bitcasts are not
+    differentiable, and gradients flow through the value gather/scatter of
+    the permutation the keys induce, never through the keys themselves.
+    """
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    x = jax.lax.stop_gradient(x)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    int_dtype = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}[itemsize]
+    canon_nan = jnp.array(jnp.nan, x.dtype)  # canonical quiet NaN
+    x = jnp.where(jnp.isnan(x), canon_nan, x + jnp.zeros((), x.dtype))  # +0 folds -0.0 -> +0.0
+    bits = jax.lax.bitcast_convert_type(x, int_dtype)
+    imin = jnp.array(jnp.iinfo(int_dtype).min, int_dtype)
+    return jnp.where(bits < 0, imin ^ ~bits, bits)
 
 
 def bisect_steps(span: int) -> int:

@@ -329,6 +329,19 @@ def _ssm_scan_bwd(chunk, d_tile, interpret, res, cts):
 _ssm_scan.defvjp(_ssm_scan_fwd, _ssm_scan_bwd)
 
 
+def _ssm_scan_launch(dt, x, bmat, cmat, a, chunk, d_tile, interpret):
+    """Pad-to-chunk + fused-kernel dispatch (the guarded primary attempt)."""
+    bsz, s, d = x.shape
+    pad = (-s) % chunk
+    if pad:
+        widen = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))  # noqa: E731
+        dt, x, bmat, cmat = widen(dt), widen(x), widen(bmat), widen(cmat)
+    y, h_final = _ssm_scan(dt, x, bmat, cmat, a, chunk, d_tile, interpret)
+    if pad:
+        y = y[:, :s]
+    return y, h_final
+
+
 @kernel_contract(kind="scan", batched=True, differentiable=True)
 def ssm_scan_pallas(
     dt: jax.Array,  # (B, S, D)
@@ -349,20 +362,40 @@ def ssm_scan_pallas(
     ``h_final`` and the trimmed ``y`` — and their gradients — are exact.
     ``interpret=None`` resolves through ``REPRO_PALLAS_INTERPRET`` like
     every :mod:`repro.kernels.ops` wrapper.
+
+    Eager calls route through guarded dispatch: preflight checks the scan
+    VMEM model against the A005 budget, and a launch failure degrades to
+    :func:`ssm_scan_ref` — the fp32 ``lax.scan`` twin the kernel is
+    tested against (see ``docs/robustness.md``).  Traced calls (the
+    training step) dispatch the kernel directly.
     """
+    from repro.runtime import faults as _faults
+    from repro.runtime import resilience as _res
+
     bsz, s, d = x.shape
+    st = a.shape[-1]
     chunk = max(1, min(chunk, s))
     d_tile = max(1, min(d_tile, d))
     while d % d_tile:  # largest divisor of D at or below the requested tile
         d_tile -= 1
-    pad = (-s) % chunk
-    if pad:
-        widen = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))  # noqa: E731
-        dt, x, bmat, cmat = widen(dt), widen(x), widen(bmat), widen(cmat)
-    y, h_final = _ssm_scan(dt, x, bmat, cmat, a, chunk, d_tile, _interp(interpret))
-    if pad:
-        y = y[:, :s]
-    return y, h_final
+    itp = _interp(interpret)
+    if not _res.guard_enabled() or _res.is_tracing(dt, x, bmat, cmat, a):
+        return _ssm_scan_launch(dt, x, bmat, cmat, a, chunk, d_tile, itp)
+    idx = _faults.next_index("ssm_scan_pallas")
+    meta = {
+        "n": s, "batch": bsz, "dtype": str(x.dtype), "seq": s, "d_model": d,
+        "state": st, "chunk": chunk, "d_tile": d_tile,
+    }
+    return _res.guarded_call(
+        "ssm_scan_pallas",
+        [
+            ("pallas-scan",
+             lambda: _ssm_scan_launch(dt, x, bmat, cmat, a, chunk, d_tile, itp)),
+            ("core-ref", lambda: ssm_scan_ref(dt, x, bmat, cmat, a)),
+        ],
+        index=idx,
+        meta=meta,
+    )
 
 
 # primary public name (the kernel the training path differentiates through)

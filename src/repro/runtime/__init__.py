@@ -1,0 +1,63 @@
+"""Runtime layer: self-healing execution on top of the static contracts.
+
+Three pieces:
+
+* :mod:`repro.runtime.resilience` — guarded kernel dispatch with explicit
+  fallback chains, preflight contract checks, and per-op health counters;
+* :mod:`repro.runtime.faults` — the deterministic fault injector that
+  drives every fallback edge in tests and ``make test-faults``;
+* :mod:`repro.runtime.fault_tolerance` — multi-host heartbeat / straggler
+  / elastic-remesh logic for the training loop.
+"""
+
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerMonitor,
+    TrainLoopSupervisor,
+    plan_elastic_mesh,
+)
+from repro.runtime.faults import (
+    FaultSpec,
+    InjectedFault,
+    fired_events,
+    inject,
+    nan_lace,
+    parse_plan,
+    reset_counters,
+)
+from repro.runtime.resilience import (
+    FallbackWarning,
+    GuardedDispatchError,
+    OpHealth,
+    VerificationError,
+    guard_enabled,
+    guarded_call,
+    health_summary,
+    preflight,
+    reset_health,
+    verify_active,
+)
+
+__all__ = [
+    "FallbackWarning",
+    "FaultSpec",
+    "GuardedDispatchError",
+    "HeartbeatMonitor",
+    "InjectedFault",
+    "OpHealth",
+    "StragglerMonitor",
+    "TrainLoopSupervisor",
+    "VerificationError",
+    "fired_events",
+    "guard_enabled",
+    "guarded_call",
+    "health_summary",
+    "inject",
+    "nan_lace",
+    "parse_plan",
+    "plan_elastic_mesh",
+    "preflight",
+    "reset_counters",
+    "reset_health",
+    "verify_active",
+]

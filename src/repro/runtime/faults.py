@@ -1,0 +1,311 @@
+"""Deterministic fault injection for the guarded dispatch layer.
+
+The resilience layer (``repro.runtime.resilience``) degrades along explicit
+fallback chains (``pallas-hier -> pallas-matrix -> core``, distributed
+``window -> gather``).  Those edges are worthless untested, and real faults
+(an XLA launch failure, a VMEM overflow, a flipped bit in a collective
+exchange, a NaN key from upstream) are rare and nondeterministic.  This
+module makes every failure class *reproducible*:
+
+* a **fault plan** selects (fault class, op, call indices, attempt label);
+* plans come from the ``REPRO_FAULTS`` environment variable or from the
+  stackable :func:`inject` context manager (tests use the latter, the
+  ``make test-faults`` CI target uses the former);
+* all pseudo-randomness (NaN lacing positions) is seeded from
+  ``zlib.crc32`` of a caller-supplied salt — **never** from wall-clock or
+  from Python's process-salted ``hash()`` — so a failing run replays
+  exactly.
+
+Fault classes
+-------------
+``launch``
+    The selected dispatch attempt raises :class:`InjectedFault` instead of
+    running, forcing the guard onto the next edge of the chain.
+``vmem``
+    The preflight VMEM model is treated as over budget for the selected
+    Pallas attempt (a modeled breach — no kernel is launched).
+``exchange``
+    The selected attempt's *result* is corrupted (min/max value swap) after
+    it runs, so output verification must catch it and degrade.
+``nan``
+    Float key operands are laced with NaNs before dispatch, exercising the
+    total-order fallback semantics end to end.
+
+Plan grammar
+------------
+``REPRO_FAULTS`` (and :func:`inject`) take ``;``-separated specs::
+
+    cls:op:indices[:match]
+
+* ``cls``     — one of ``launch | vmem | exchange | nan``;
+* ``op``      — guarded op name (``merge``, ``sort_batched``,
+  ``distributed_merge``, ``serving.decode``, ...) or ``*`` for all;
+* ``indices`` — comma-separated 0-based per-op call indices, or ``*``;
+* ``match``   — optional substring filter on the attempt label
+  (``pallas-hier``, ``window``, ...); when omitted the fault applies to
+  any attempt *except the final one* of a chain, so a wildcard plan
+  degrades every call to its oracle instead of bricking it.
+
+Example: ``launch:merge:0,2;nan:sort*:*`` fails the Pallas launch on merge
+calls 0 and 2 and NaN-laces the keys of every ``sort*`` call.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import fnmatch
+import os
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FaultSpec",
+    "InjectedFault",
+    "active",
+    "corrupt",
+    "fired_events",
+    "inject",
+    "nan_lace",
+    "next_index",
+    "parse_plan",
+    "reset_counters",
+    "should_fire",
+]
+
+FAULT_CLASSES = ("launch", "vmem", "exchange", "nan")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an attempt selected for a ``launch`` fault."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One parsed ``cls:op:indices[:match]`` clause of a fault plan."""
+
+    cls: str
+    op: str = "*"
+    indices: Optional[Tuple[int, ...]] = None  # None == every call
+    match: str = ""  # substring filter on the attempt label; "" == default
+
+    def selects(self, cls: str, op: str, index: int) -> bool:
+        if cls != self.cls:
+            return False
+        if not fnmatch.fnmatchcase(op, self.op):
+            return False
+        return self.indices is None or index in self.indices
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """Audit record of one fault that actually fired."""
+
+    cls: str
+    op: str
+    index: int
+    label: str
+
+
+# ---------------------------------------------------------------------------
+# plan state: env plan (cached on the raw env value) + an inject() stack
+# ---------------------------------------------------------------------------
+
+_ENV_VAR = "REPRO_FAULTS"
+_STACK: List[Tuple[FaultSpec, ...]] = []
+_ENV_CACHE: Tuple[str, Tuple[FaultSpec, ...]] = ("", ())
+_COUNTERS: Dict[str, int] = {}
+_FIRED: List[FaultEvent] = []
+
+
+def parse_plan(plan: str) -> Tuple[FaultSpec, ...]:
+    """Parse a ``;``-separated plan string into :class:`FaultSpec` tuples."""
+    specs = []
+    for clause in plan.split(";"):
+        clause = clause.strip()
+        if not clause:
+            continue
+        parts = clause.split(":")
+        if len(parts) < 2 or len(parts) > 4:
+            raise ValueError(f"bad fault clause {clause!r} (want cls:op[:indices[:match]])")
+        cls, op = parts[0].strip(), parts[1].strip()
+        if cls not in FAULT_CLASSES:
+            raise ValueError(f"unknown fault class {cls!r} (want one of {FAULT_CLASSES})")
+        raw_idx = parts[2].strip() if len(parts) > 2 else "*"
+        indices: Optional[Tuple[int, ...]]
+        if raw_idx in ("", "*"):
+            indices = None
+        else:
+            indices = tuple(int(tok) for tok in raw_idx.split(",") if tok.strip())
+        match = parts[3].strip() if len(parts) > 3 else ""
+        specs.append(FaultSpec(cls=cls, op=op or "*", indices=indices, match=match))
+    return tuple(specs)
+
+
+def _env_specs() -> Tuple[FaultSpec, ...]:
+    global _ENV_CACHE
+    raw = os.environ.get(_ENV_VAR, "")
+    if raw != _ENV_CACHE[0]:
+        _ENV_CACHE = (raw, parse_plan(raw))
+    return _ENV_CACHE[1]
+
+
+def _specs() -> Tuple[FaultSpec, ...]:
+    specs = _env_specs()
+    for layer in _STACK:
+        specs = specs + layer
+    return specs
+
+
+def active() -> bool:
+    """True when any fault plan (env or :func:`inject`) is in force."""
+    return bool(_specs())
+
+
+@contextlib.contextmanager
+def inject(plan: str):
+    """Context manager activating ``plan`` (stacks on top of ``REPRO_FAULTS``).
+
+    Per-op call counters and the fired-event log are snapshotted on entry
+    and restored on exit, so each ``with inject(...)`` block sees call
+    index 0 for every op and leaves no trace behind.
+    """
+    specs = parse_plan(plan)
+    saved_counters = dict(_COUNTERS)
+    saved_fired = list(_FIRED)
+    _COUNTERS.clear()
+    _FIRED.clear()
+    _STACK.append(specs)
+    try:
+        yield
+    finally:
+        _STACK.pop()
+        _COUNTERS.clear()
+        _COUNTERS.update(saved_counters)
+        _FIRED[:] = saved_fired
+
+
+def next_index(op: str) -> int:
+    """Return this call's 0-based index for ``op`` and advance the counter.
+
+    Called exactly once per guarded call (not per attempt), so a plan's
+    ``indices`` address stable positions in the call stream regardless of
+    how many fallback attempts each call burns.
+    """
+    idx = _COUNTERS.get(op, 0)
+    _COUNTERS[op] = idx + 1
+    return idx
+
+
+def reset_counters() -> None:
+    """Zero every per-op call counter and clear the fired-event log."""
+    _COUNTERS.clear()
+    _FIRED.clear()
+
+
+def should_fire(cls: str, op: str, index: int, label: str = "", last: bool = False) -> bool:
+    """Pure query: does the active plan fire ``cls`` on this attempt?
+
+    ``label`` is the dispatch attempt label; a spec with an explicit
+    ``match`` fires only when ``match`` is a substring of ``label``.  A
+    spec *without* a match never fires on the final attempt of a chain
+    (``last=True``), so wildcard plans always leave the oracle edge alive.
+    Fires are recorded in :func:`fired_events`.
+    """
+    for spec in _specs():
+        if not spec.selects(cls, op, index):
+            continue
+        if spec.match:
+            if spec.match not in label:
+                continue
+        elif last:
+            continue
+        _FIRED.append(FaultEvent(cls=cls, op=op, index=index, label=label))
+        return True
+    return False
+
+
+def fired_events() -> List[FaultEvent]:
+    """Copy of every fault that fired since the last reset/inject entry."""
+    return list(_FIRED)
+
+
+# ---------------------------------------------------------------------------
+# deterministic payload mutators
+# ---------------------------------------------------------------------------
+
+
+def _rng(salt: str) -> np.random.Generator:
+    # crc32 (not hash()): stable across processes and interpreter runs
+    return np.random.default_rng(zlib.crc32(salt.encode("utf-8")))
+
+
+def nan_lace(x, salt: str):
+    """Return ``x`` with ~1/8 of its elements (>=1) replaced by NaN.
+
+    Positions are drawn from a crc32(salt)-seeded generator, so a test can
+    reproduce the exact laced operand independently (same salt -> same
+    lacing).  Non-float inputs are returned unchanged.
+    """
+    arr = np.asarray(x)
+    if not np.issubdtype(arr.dtype, np.floating) or arr.size == 0:
+        return x
+    flat = arr.astype(arr.dtype, copy=True).reshape(-1)
+    count = max(1, flat.size // 8)
+    pos = _rng(salt).choice(flat.size, size=count, replace=False)
+    flat[pos] = np.nan
+    out = flat.reshape(arr.shape)
+    import jax.numpy as jnp
+
+    return jnp.asarray(out) if not isinstance(x, np.ndarray) else out
+
+
+def corrupt(x, salt: str = ""):
+    """Deterministically corrupt an attempt result (exchange fault).
+
+    Swaps the values at the first-min and first-max positions of the
+    flattened array (keys only, for ``(keys, values)`` tuples).  On any
+    non-constant array this is guaranteed to break sortedness — after the
+    swap the first element of the flattened view holds the global max while
+    a strictly smaller element follows it — so output verification must
+    reject the attempt.  Constant arrays are returned unchanged (there is
+    no order to violate).  ``salt`` is accepted for signature stability;
+    the mutation itself is position-deterministic and needs no randomness.
+    """
+    if isinstance(x, tuple):
+        return (corrupt(x[0], salt),) + tuple(x[1:])
+    arr = np.asarray(x)
+    if arr.size < 2:
+        return x
+    flat = arr.copy().reshape(-1)
+    if np.issubdtype(flat.dtype, np.floating):
+        if not np.any(~np.isnan(flat)):
+            return x
+        i, j = int(np.nanargmin(flat)), int(np.nanargmax(flat))
+    else:
+        i, j = int(np.argmin(flat)), int(np.argmax(flat))
+    if flat[i] == flat[j]:
+        return x
+    flat[i], flat[j] = flat[j], flat[i]
+    out = flat.reshape(arr.shape)
+    import jax.numpy as jnp
+
+    return jnp.asarray(out) if not isinstance(x, np.ndarray) else out
+
+
+def maybe_nan_lace(op: str, index: int, args: tuple, key_positions: Sequence[int]) -> tuple:
+    """Lace the key operands of a guarded call when a ``nan`` fault selects it.
+
+    ``key_positions`` are the indices into ``args`` holding key arrays
+    (values are never laced — NaN payloads do not affect comparisons).
+    Salts are ``"{op}:{index}:{pos}"`` so tests can rebuild the exact laced
+    operands with :func:`nan_lace` and compare against an oracle.
+    """
+    if not key_positions or not should_fire("nan", op, index):
+        return args
+    out = list(args)
+    for pos in key_positions:
+        out[pos] = nan_lace(out[pos], f"{op}:{index}:{pos}")
+    return tuple(out)

@@ -5,11 +5,39 @@ the request queue (prefill), all occupied slots decode in lockstep (one
 jitted decode step per tick).  Per-slot absolute positions make the
 lockstep correct for ragged prompt lengths.  Sampling uses the
 merge-path top-k sampler.
+
+Graceful degradation
+--------------------
+The engine never drops a request silently: every submitted request ends
+in ``engine.done`` with an explicit terminal ``status`` —
+
+* ``completed`` — generated ``max_new_tokens`` (or hit the sequence cap);
+* ``timed_out`` — exceeded its per-request ``deadline_ticks`` budget (or
+  the engine ran out of ``run_until_done`` ticks) with its partial
+  ``generated`` tokens preserved;
+* ``shed``      — rejected at ``submit`` because the queue was full
+  (``max_pending``), or never scheduled before the tick budget drained;
+* ``failed``    — the decode step failed ``max_retries`` consecutive
+  times while the request was in flight (partial tokens preserved).
+
+A failed tick (an exception out of the jitted decode — e.g. an injected
+``launch:serving.decode`` fault from :mod:`repro.runtime.faults`) does
+not kill the engine: it backs off for ``min(backoff_base * 2**(streak-1),
+backoff_cap)`` ticks and retries; only after ``max_retries`` consecutive
+failures are the in-flight requests terminated (``failed``), after which
+the engine recovers and keeps serving the queue.  All timing is counted
+in deterministic engine *ticks* — never wall clock — so every degradation
+path replays exactly under the fault injector.
+
+``run_until_done`` returns a :class:`ServingReport` summarising the
+outcome; ``report.ok()`` is the zero-degradation check CI asserts on a
+clean tree.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -18,6 +46,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward_decode, forward_prefill, init_caches
+from repro.runtime import faults as _faults
+from repro.runtime.resilience import FallbackWarning
 from repro.train.steps import _cast
 from . import sampler as sampler_mod
 
@@ -29,12 +59,44 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 => greedy
     topk: int = 40
+    deadline_ticks: Optional[int] = None  # tick budget from submission; None = no deadline
     # outputs
     generated: Optional[List[int]] = None
+    status: str = "pending"  # pending | completed | timed_out | shed | failed
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Outcome summary returned by :meth:`ServingEngine.run_until_done`."""
+
+    ticks: int = 0
+    completed: int = 0
+    timed_out: int = 0
+    shed: int = 0
+    failed: int = 0
+    retries: int = 0
+    statuses: Dict[int, str] = dataclasses.field(default_factory=dict)
+    reasons: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def ok(self) -> bool:
+        """True when every request completed and no tick was retried."""
+        return self.timed_out == 0 and self.shed == 0 and self.failed == 0
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, batch: int, max_seq: int, seed: int = 0):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        batch: int,
+        max_seq: int,
+        seed: int = 0,
+        max_pending: Optional[int] = None,
+        max_retries: int = 3,
+        backoff_base: int = 1,
+        backoff_cap: int = 8,
+    ):
         self.cfg = cfg
         self.compute_dtype = jnp.dtype(cfg.dtype)
         self.params = _cast(params, self.compute_dtype)
@@ -46,13 +108,65 @@ class ServingEngine:
         self.active: List[Optional[Request]] = [None] * batch
         self.pending: List[Request] = []
         self.done: Dict[int, Request] = {}
+        self.max_pending = max_pending
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.ticks = 0
+        self.retries = 0
+        self._cooldown = 0
+        self._fail_streak = 0
         self._decode = jax.jit(
             lambda params, caches, tok, pos: forward_decode(cfg, params, caches, tok, pos)
         )
 
+    # -- request lifecycle ------------------------------------------------
+
     def submit(self, req: Request) -> None:
+        """Queue a request — or shed it, loudly, when the queue is full."""
         req.generated = []
+        req._submit_tick = self.ticks
+        if self.max_pending is not None and len(self.pending) >= self.max_pending:
+            self._finish(req, "shed", f"queue full (max_pending={self.max_pending})")
+            return
+        req.status = "pending"
         self.pending.append(req)
+
+    def _finish(self, req: Request, status: str, reason: str = "") -> None:
+        req.status = status
+        req.reason = reason
+        if req.generated is None:
+            req.generated = []
+        self.done[req.uid] = req
+        if status != "completed":
+            warnings.warn(
+                f"serving: request {req.uid} {status}"
+                + (f" ({reason})" if reason else ""),
+                FallbackWarning,
+                stacklevel=4,
+            )
+
+    def _expire_deadlines(self) -> None:
+        """Terminate (loudly) every request past its tick budget."""
+        for slot in range(self.batch):
+            req = self.active[slot]
+            if req is not None and self._past_deadline(req):
+                self._finish(req, "timed_out", f"deadline_ticks={req.deadline_ticks} exceeded")
+                self.active[slot] = None
+        kept = []
+        for req in self.pending:
+            if self._past_deadline(req):
+                self._finish(req, "timed_out", f"deadline_ticks={req.deadline_ticks} in queue")
+            else:
+                kept.append(req)
+        self.pending = kept
+
+    def _past_deadline(self, req: Request) -> bool:
+        if req.deadline_ticks is None:
+            return False
+        return self.ticks - getattr(req, "_submit_tick", 0) >= req.deadline_ticks
+
+    # -- decode -----------------------------------------------------------
 
     def _fill_slot(self, slot: int, req: Request) -> None:
         """Prefill one request into a slot by stepping its prompt tokens.
@@ -78,8 +192,8 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
         return int(sampler_mod.topk_sample(lrow, sub, k=req.topk, temperature=req.temperature)[0])
 
-    def step(self) -> None:
-        """One engine tick: refill free slots, then one lockstep decode."""
+    def _tick_body(self) -> None:
+        """Refill free slots, then one lockstep decode."""
         for slot in range(self.batch):
             if self.active[slot] is None and self.pending:
                 req = self.pending.pop(0)
@@ -102,12 +216,94 @@ class ServingEngine:
             nxt = self._sample(req, logits_np[s])
             req.generated.append(nxt)
             if len(req.generated) >= req.max_new_tokens or self.pos[s] >= self.max_seq - 1:
-                self.done[req.uid] = req
+                self._finish(req, "completed")
                 self.active[s] = None
 
-    def run_until_done(self, max_ticks: int = 10_000) -> None:
+    def _on_step_failure(self, err: BaseException) -> None:
+        self._fail_streak += 1
+        self.retries += 1
+        if self._fail_streak > self.max_retries:
+            # Retry budget exhausted: terminate the in-flight requests with
+            # their partial tokens, then recover — the queue keeps draining.
+            for slot in range(self.batch):
+                req = self.active[slot]
+                if req is not None:
+                    self._finish(
+                        req,
+                        "failed",
+                        f"decode failed {self._fail_streak}x: {type(err).__name__}: {err}",
+                    )
+                    self.active[slot] = None
+            self._fail_streak = 0
+            self._cooldown = 0
+            return
+        self._cooldown = min(self.backoff_base * (2 ** (self._fail_streak - 1)), self.backoff_cap)
+        warnings.warn(
+            f"serving: decode tick failed ({type(err).__name__}: {err}); "
+            f"retry {self._fail_streak}/{self.max_retries} after {self._cooldown} tick(s)",
+            FallbackWarning,
+            stacklevel=3,
+        )
+
+    def step(self) -> None:
+        """One engine tick: expire deadlines, then refill + lockstep decode.
+
+        A tick spent cooling down after a failed decode still advances the
+        clock (deadlines keep expiring), so a wedged backend cannot stall
+        requests forever.
+        """
+        self.ticks += 1
+        self._expire_deadlines()
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return
+        idx = _faults.next_index("serving.decode")
+        try:
+            if _faults.should_fire("launch", "serving.decode", idx, label="decode"):
+                raise _faults.InjectedFault(f"injected launch failure: serving.decode[{idx}]")
+            self._tick_body()
+        except Exception as err:
+            self._on_step_failure(err)
+            return
+        self._fail_streak = 0
+
+    # -- draining ---------------------------------------------------------
+
+    def _report(self) -> ServingReport:
+        rep = ServingReport(ticks=self.ticks, retries=self.retries)
+        for uid, req in self.done.items():
+            rep.statuses[uid] = req.status
+            if req.reason:
+                rep.reasons[uid] = req.reason
+            if req.status == "completed":
+                rep.completed += 1
+            elif req.status == "timed_out":
+                rep.timed_out += 1
+            elif req.status == "shed":
+                rep.shed += 1
+            elif req.status == "failed":
+                rep.failed += 1
+        return rep
+
+    def run_until_done(self, max_ticks: int = 10_000) -> ServingReport:
+        """Drain the engine; always return a :class:`ServingReport`.
+
+        On hitting ``max_ticks`` no request is abandoned silently: in-flight
+        requests are marked ``timed_out`` (partial ``generated`` preserved)
+        and still-queued requests are marked ``shed``, all landing in
+        ``self.done`` with explicit reasons.
+        """
         for _ in range(max_ticks):
             if not self.pending and all(a is None for a in self.active):
-                return
+                break
             self.step()
-        raise TimeoutError("serving engine did not drain")
+        else:
+            for slot in range(self.batch):
+                req = self.active[slot]
+                if req is not None:
+                    self._finish(req, "timed_out", f"engine out of ticks (max_ticks={max_ticks})")
+                    self.active[slot] = None
+            for req in self.pending:
+                self._finish(req, "shed", f"never scheduled within max_ticks={max_ticks}")
+            self.pending = []
+        return self._report()

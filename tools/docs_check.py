@@ -5,13 +5,18 @@ Public surface checked:
 * every name in ``repro.core.__all__`` (the library's primary boundary);
 * every public function defined in ``repro.kernels.ops`` (the kernel
   dispatch surface), plus its documented module-level switches;
-* every name in ``repro.analysis.__all__`` (the static checker's surface).
+* every name in ``repro.analysis.__all__`` (the static checker's surface);
+* every name in ``repro.runtime.__all__`` (the self-healing execution
+  layer: guarded dispatch, fault injection, fault tolerance) plus the
+  serving degradation surface (``Request`` / ``ServingReport``).
 
 Wired to ``make docs-check`` (and ``make ci``), so a PR that adds a public
-symbol without documenting it in the architecture page fails CI.  The
-check requires each symbol as a whole word (word-boundary regex, so
-``merge`` is not satisfied by ``merge_batched``) — the "Public API index"
-section lists every symbol by name.
+symbol without documenting it fails CI.  Symbols may be documented in
+``docs/architecture.md`` or ``docs/robustness.md`` (the two pages are
+searched as one corpus).  The check requires each symbol as a whole word
+(word-boundary regex, so ``merge`` is not satisfied by
+``merge_batched``) — the "Public API index" section lists every symbol
+by name.
 """
 
 from __future__ import annotations
@@ -24,7 +29,10 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
-DOC = os.path.join(ROOT, "docs", "architecture.md")
+DOCS = (
+    os.path.join(ROOT, "docs", "architecture.md"),
+    os.path.join(ROOT, "docs", "robustness.md"),
+)
 
 
 def public_symbols() -> dict:
@@ -32,6 +40,7 @@ def public_symbols() -> dict:
     import repro.analysis as analysis
     import repro.core as core
     import repro.kernels.ops as ops
+    import repro.runtime as runtime
 
     ops_names = sorted(
         name
@@ -45,21 +54,24 @@ def public_symbols() -> dict:
         "repro.core": sorted(core.__all__),
         "repro.kernels.ops": ops_names,
         "repro.analysis": sorted(analysis.__all__),
+        "repro.runtime": sorted(runtime.__all__),
+        "repro.serving.engine": ["Request", "ServingReport", "ServingEngine"],
     }
 
 
 def main() -> int:
-    if not os.path.exists(DOC):
-        print(f"docs-check: FAIL — {DOC} does not exist")
+    missing_docs = [d for d in DOCS if not os.path.exists(d)]
+    if missing_docs:
+        print(f"docs-check: FAIL — missing doc page(s): {', '.join(missing_docs)}")
         return 1
-    text = open(DOC).read()
+    text = "\n".join(open(d).read() for d in DOCS)
     missing = []
     for module, names in public_symbols().items():
         for name in names:
             if not re.search(rf"\b{re.escape(name)}\b", text):
                 missing.append(f"{module}.{name}")
     if missing:
-        print("docs-check: FAIL — public symbols missing from docs/architecture.md:")
+        print("docs-check: FAIL — public symbols missing from docs/ (architecture.md + robustness.md):")
         for m in missing:
             print(f"  - {m}")
         return 1

@@ -27,6 +27,12 @@ fix (the catalog with full rationale lives in ``docs/analysis.md``):
   (underscores stripped) must appear in some ``tests/*.py`` that
   exercises gradients.  An untested backward is how silent wrong
   gradients ship.
+* **L006** — no bare ``except:`` / ``except Exception:`` around a kernel
+  launch outside the guard layer
+  (``src/repro/runtime/resilience.py``).  Swallowing a launch failure
+  anywhere else bypasses the fallback chain, the health counters, and
+  the ``FallbackWarning`` — exactly the silent degradation the guarded
+  dispatch exists to prevent.
 
 Suppression: append ``# lint: ok`` (any rule) or ``# lint: ok(L004)``
 (one rule) to the flagged line.  Stdlib ``ast`` only — the container is
@@ -46,6 +52,9 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 # the one module allowed to spell sentinels from iinfo/finfo/inf
 SANCTIONED_SENTINEL_FILES = ("src/repro/core/merge_path.py",)
+
+# the one module allowed to catch launch failures broadly (guarded dispatch)
+SANCTIONED_LAUNCH_CATCH_FILES = ("src/repro/runtime/resilience.py",)
 
 # callables whose arguments are "keys" for L002's descending-order check
 _KEYED_CALL = re.compile(r"(sort|topk|top_k|merge|argsort)", re.IGNORECASE)
@@ -141,6 +150,7 @@ def lint_source(
     posix = Path(path).as_posix()
     in_kernels = "/kernels/" in posix or posix.startswith("kernels/")
     sanctioned = any(posix.endswith(s) for s in SANCTIONED_SENTINEL_FILES)
+    launch_catch_ok = any(posix.endswith(s) for s in SANCTIONED_LAUNCH_CATCH_FILES)
     vs: List[LintViolation] = []
 
     # ancestry map so custom_vjp sites resolve to their outermost function
@@ -221,6 +231,32 @@ def lint_source(
                             f"per round)"))
                         break
 
+        # --- L006: broad except around a kernel launch outside the guard --
+        if not launch_catch_ok and isinstance(node, ast.Try):
+            launches = any(
+                isinstance(inner, ast.Call) and _LAUNCH_CALL.search(_callee_name(inner))
+                for stmt in node.body
+                for inner in ast.walk(stmt)
+            )
+            if launches:
+                for handler in node.handlers:
+                    broad = handler.type is None or (
+                        isinstance(handler.type, (ast.Name, ast.Attribute))
+                        and (
+                            handler.type.id
+                            if isinstance(handler.type, ast.Name)
+                            else handler.type.attr
+                        )
+                        in ("Exception", "BaseException")
+                    )
+                    if broad and not _suppressed(sup, handler.lineno, "L006"):
+                        vs.append(LintViolation(
+                            "L006", path, handler.lineno,
+                            "broad except around a kernel launch — only the "
+                            "guard layer (repro.runtime.resilience."
+                            "guarded_call) may catch launch failures; route "
+                            "the call through guarded dispatch instead"))
+
         # --- L005 collection: custom_vjp owners ---------------------------
         if collect_vjp_owners is not None:
             hit = None
@@ -298,7 +334,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"lint: {v}", file=sys.stderr)
         print(f"lint: FAIL ({len(vs)} violations)", file=sys.stderr)
         return 1
-    print("lint: OK (AST rules L001-L005 clean)")
+    print("lint: OK (AST rules L001-L006 clean)")
     return 0
 
 
