@@ -7,7 +7,7 @@ PY ?= python
 # highest existing BENCH_<n>.json + 1, so PRs can't forget the bump
 BENCH_JSON ?= $(shell $(PY) tools/bench_diff.py --next)
 
-.PHONY: test test-faults bench-smoke bench lint check ci docs-check train-smoke
+.PHONY: test test-faults bench-smoke bench lint check ci docs-check train-smoke trace-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -33,6 +33,13 @@ docs-check:
 train-smoke:
 	PYTHONPATH=src $(PY) -m repro.train.smoke
 
+# telemetry gate: run a small serving workload + one distributed merge,
+# write the Perfetto trace, and assert it is healthy — zero unclosed
+# spans and Cor. 7 window balance ratio <= 1.05
+trace-smoke:
+	PYTHONPATH=src $(PY) -m repro.telemetry.smoke --out trace.json
+	PYTHONPATH=src $(PY) -m repro.telemetry --check trace.json
+
 # static analysis, run before anything launches: abstract kernel-contract
 # checker (eval_shape only — zero device kernels), repo-specific AST lint,
 # and the perf-regression gate over existing BENCH_*.json anchor rows
@@ -46,7 +53,7 @@ check:
 # kernel-path train step + smoke benchmarks recording the perf point
 # (benchmarks/run.py fails if any fallback fired on the clean tree), then
 # the bench-diff gate re-checks the fresh snapshot against the previous PR's
-ci: check test test-faults docs-check train-smoke
+ci: check test test-faults docs-check train-smoke trace-smoke
 	PYTHONPATH=src $(PY) benchmarks/run.py --smoke --json $(BENCH_JSON)
 	$(PY) tools/bench_diff.py --check
 

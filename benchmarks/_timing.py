@@ -1,0 +1,65 @@
+"""Shared benchmark timing: the one ``timeit`` (and the one stopwatch).
+
+Replaces the four copy-pasted ``timeit`` helpers that used to live in
+``bench_merge.py`` / ``bench_distributed.py`` / ``bench_tile_engine.py``
+/ ``hillclimb.py``.  Every sample lands in a telemetry histogram
+(``bench/<label>``) in the active registry, so each bench row can report
+exact p50/p95/p99 — not just the median — and ``benchmarks/run.py``
+folds the full distribution into the ``BENCH_*.json`` telemetry block.
+
+This file and ``src/repro/telemetry/`` are the only places allowed to
+touch ``time.perf_counter`` directly (lint rule L007).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+from repro.telemetry import get_telemetry
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2, label: Optional[str] = None) -> float:
+    """Median wall-clock microseconds per call of ``fn(*args)``.
+
+    Blocks on device completion each iteration.  When ``label`` is given,
+    every sample is recorded into the ``bench/<label>`` histogram of the
+    active telemetry registry (exact percentiles for the bench summary).
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    if label is not None:
+        hist = get_telemetry().histogram(f"bench/{label}")
+        for s in samples:
+            hist.record(s)
+    samples.sort()
+    mid = len(samples) // 2
+    if len(samples) % 2:
+        return samples[mid]
+    return 0.5 * (samples[mid - 1] + samples[mid])
+
+
+class _Stopwatch:
+    __slots__ = ("seconds",)
+
+    def __init__(self) -> None:
+        self.seconds = 0.0
+
+
+@contextmanager
+def stopwatch():
+    """Wall-clock a block: ``with stopwatch() as sw: ...; sw.seconds``."""
+    sw = _Stopwatch()
+    t0 = time.perf_counter()
+    try:
+        yield sw
+    finally:
+        sw.seconds = time.perf_counter() - t0

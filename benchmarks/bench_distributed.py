@@ -33,10 +33,14 @@ from typing import Dict, List
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _INNER = """
-import json, sys, time
+import json, sys
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import distributed_merge, distributed_sort
 from repro.core.distributed import exchange_bytes
+from benchmarks._timing import timeit
+from repro.telemetry import get_telemetry
+import repro.runtime.faults as faults
+import repro.runtime.resilience as res
 
 P = 8
 n = int(sys.argv[1])
@@ -47,19 +51,14 @@ a = jnp.asarray(np.sort(rng.standard_normal(na)).astype(np.float32))
 b = jnp.asarray(np.sort(rng.standard_normal(nb)).astype(np.float32))
 rows = []
 
-def timeit(fn):
-    jax.block_until_ready(fn())  # compile
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
-
 eb = exchange_bytes(na, nb, P, 4)
 ref = None
 for exchange in ("gather", "window"):
-    us = timeit(lambda: distributed_merge(a, b, exchange=exchange))
+    us = timeit(
+        lambda: distributed_merge(a, b, exchange=exchange),
+        iters=iters, warmup=1,
+        label=f"distributed/merge_{exchange}_n{n}_p{P}",
+    )
     out = np.asarray(distributed_merge(a, b, exchange=exchange))
     if ref is None:
         ref = out
@@ -77,13 +76,20 @@ for exchange in ("gather", "window"):
 
 x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
 for combine in ("onepass", "tournament"):
-    us = timeit(lambda: distributed_sort(x, combine=combine)[0])
+    us = timeit(
+        lambda: distributed_sort(x, combine=combine)[0],
+        iters=iters, warmup=1,
+        label=f"distributed/sort_{combine}_n{n}_p{P}",
+    )
     rows.append({
         "name": f"distributed/sort_{combine}_n{n}_p{P}",
         "us_per_call": us,
         "derived": "one all_to_all bucket round",
     })
-print(json.dumps(rows))
+
+hs = res.health_summary()
+assert faults.active() or hs["totals"]["fallbacks"] == 0, hs
+print(json.dumps({"rows": rows, "telemetry": get_telemetry().snapshot()}))
 """
 
 
@@ -93,7 +99,8 @@ def bench_distributed(rows: List[Dict], smoke: bool = False) -> None:
     iters = 2 if smoke else 5
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    # src for repro, repo root for benchmarks._timing
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + os.pathsep + _ROOT
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(_INNER), str(n), str(iters)],
         env=env,
@@ -105,4 +112,11 @@ def bench_distributed(rows: List[Dict], smoke: bool = False) -> None:
         raise RuntimeError(
             f"bench_distributed subprocess failed:\n{proc.stdout}\n{proc.stderr}"
         )
-    rows.extend(json.loads(proc.stdout.strip().splitlines()[-1]))
+    payload = json.loads(proc.stdout.strip().splitlines()[-1])
+    rows.extend(payload["rows"])
+    # fold the subprocess's counters/gauges/histograms (per-device window
+    # sizes, exchange bytes, balance ratio, bench percentiles) into this
+    # process's registry so run.py's telemetry summary carries them
+    from repro.telemetry import get_telemetry
+
+    get_telemetry().merge_snapshot(payload["telemetry"])

@@ -26,26 +26,13 @@ wired to ``make bench-smoke``).
 
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-
-def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall time (us) of jitted fn(*args)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+from benchmarks._timing import timeit
 
 
 def _sorted_pair(n: int, seed: int = 0):
@@ -76,7 +63,11 @@ def bench_merge_throughput(rows: List[Dict], smoke: bool = False) -> None:
             "pallas_spm_tile512": jax.jit(lambda x, y: merge_pallas(x, y, tile=512)),
         }
         for name, fn in variants.items():
-            us = timeit(fn, a, b, iters=3 if smoke else 5, warmup=1 if smoke else 2)
+            us = timeit(
+                fn, a, b,
+                iters=3 if smoke else 5, warmup=1 if smoke else 2,
+                label=f"merge_throughput/{name}/n={2*n}",
+            )
             rows.append({
                 "name": f"merge_throughput/{name}/n={2*n}",
                 "us_per_call": us,
@@ -122,7 +113,10 @@ def bench_batched_merge(rows: List[Dict], smoke: bool = False) -> None:
     }
     us_by_name = {}
     for name, fn in variants.items():
-        us = timeit(fn, a, b, iters=iters, warmup=warmup)
+        us = timeit(
+            fn, a, b, iters=iters, warmup=warmup,
+            label=f"batched_merge/{name}/B={bsz}/n={2*n}",
+        )
         us_by_name[name] = us
         rows.append({
             "name": f"batched_merge/{name}/B={bsz}/n={2*n}",
@@ -161,8 +155,14 @@ def bench_ragged_merge(rows: List[Dict], smoke: bool = False) -> None:
     al = jnp.asarray(rng.integers(0, n + 1, bsz), jnp.int32)
     bl = jnp.asarray(rng.integers(0, n + 1, bsz), jnp.int32)
     iters, warmup = (3, 1) if smoke else (5, 2)
-    us_uniform = timeit(jax.jit(core_merge_batched), a, b, iters=iters, warmup=warmup)
-    us_ragged = timeit(jax.jit(merge_batched_ragged), a, b, al, bl, iters=iters, warmup=warmup)
+    us_uniform = timeit(
+        jax.jit(core_merge_batched), a, b, iters=iters, warmup=warmup,
+        label=f"ragged_merge/uniform_fused_batched/B={bsz}/n={2*n}",
+    )
+    us_ragged = timeit(
+        jax.jit(merge_batched_ragged), a, b, al, bl, iters=iters, warmup=warmup,
+        label=f"ragged_merge/ragged_fused_batched/B={bsz}/n={2*n}",
+    )
     rows.append({
         "name": f"ragged_merge/uniform_fused_batched/B={bsz}/n={2*n}",
         "us_per_call": us_uniform,
@@ -190,7 +190,11 @@ def bench_partition_cost(rows: List[Dict], smoke: bool = False) -> None:
     for p in ps:
         diags = jnp.arange(p, dtype=jnp.int32) * (2 * n // p)
         fn = jax.jit(diagonal_intersections)
-        us = timeit(fn, a, b, diags, iters=3 if smoke else 5, warmup=1 if smoke else 2)
+        us = timeit(
+            fn, a, b, diags,
+            iters=3 if smoke else 5, warmup=1 if smoke else 2,
+            label=f"partition_cost/p={p}/n={2*n}",
+        )
         rows.append({
             "name": f"partition_cost/p={p}/n={2*n}",
             "us_per_call": us,
@@ -238,10 +242,16 @@ def bench_segmented_vs_regular(rows: List[Dict], smoke: bool = False) -> None:
     segs = (1 << 12, 1 << 13) if smoke else (1 << 14, 1 << 16)
     a, b = _sorted_pair(n, seed=5)
     iters, warmup = (3, 1) if smoke else (5, 2)
-    us_flat = timeit(jax.jit(core_merge), a, b, iters=iters, warmup=warmup)
+    us_flat = timeit(
+        jax.jit(core_merge), a, b, iters=iters, warmup=warmup,
+        label=f"segmented_merge/flat_baseline/n={2*n}",
+    )
     for seg in segs:
         fn = jax.jit(lambda x, y, s=seg: segmented_merge(x, y, s))
-        us = timeit(fn, a, b, iters=iters, warmup=warmup)
+        us = timeit(
+            fn, a, b, iters=iters, warmup=warmup,
+            label=f"segmented_merge/seg={seg}/n={2*n}",
+        )
         rows.append({
             "name": f"segmented_merge/seg={seg}/n={2*n}",
             "us_per_call": us,
@@ -263,11 +273,20 @@ def bench_sort(rows: List[Dict], smoke: bool = False) -> None:
         rng = np.random.default_rng(n)
         x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
         iters, warmup = (3, 1) if smoke else (5, 2)
-        us_mp = timeit(jax.jit(merge_sort), x, iters=iters, warmup=warmup)
-        us_xla = timeit(jax.jit(jnp.sort), x, iters=iters, warmup=warmup)
+        us_mp = timeit(
+            jax.jit(merge_sort), x, iters=iters, warmup=warmup,
+            label=f"sort/merge_path/n={n}",
+        )
+        us_xla = timeit(
+            jax.jit(jnp.sort), x, iters=iters, warmup=warmup,
+            label=f"sort/xla_baseline/n={n}",
+        )
         # kernel-backed sort: wide rounds on the flat round kernel
         # (hierarchical engine, autotuned (tile, leaf), padding hoisted)
-        us_ko = timeit(kops.sort, x, iters=iters, warmup=warmup)
+        us_ko = timeit(
+            kops.sort, x, iters=iters, warmup=warmup,
+            label=f"sort/pallas_flat_rounds/n={n}",
+        )
         rows.append({
             "name": f"sort/merge_path/n={n}",
             "us_per_call": us_mp,
@@ -301,7 +320,11 @@ def bench_moe_dispatch(rows: List[Dict], smoke: bool = False) -> None:
         params = init_params(cfg, jax.random.key(0))
         layer0 = jax.tree.map(lambda t: t[0], params["layers"])
         fn = jax.jit(lambda p, xx, c=cfg: moe_apply(p, xx, c))
-        us = timeit(fn, layer0["moe"], x, iters=3 if smoke else 5, warmup=1 if smoke else 2)
+        us = timeit(
+            fn, layer0["moe"], x,
+            iters=3 if smoke else 5, warmup=1 if smoke else 2,
+            label=f"moe_dispatch/{mode}/tokens={bsz*seq}",
+        )
         rows.append({
             "name": f"moe_dispatch/{mode}/tokens={bsz*seq}",
             "us_per_call": us,

@@ -1,0 +1,70 @@
+"""Serving-engine decode microbenchmark: the ROADMAP's tokens/s,
+per-tick latency percentiles, and slot-occupancy numbers.
+
+A small synthetic closed workload (every request submitted up front —
+the smallest stand-in for an open-loop stream that still exercises slot
+refill and lockstep decode) runs through ``ServingEngine.run_until_done``
+on the reduced tinyllama config.  The interesting columns come from the
+engine's own telemetry: decode-tick wall p50/p95/p99
+(``serving.tick_wall_us``), mean slot occupancy, and ticks-to-first-token
+— all folded into the ``BENCH_*.json`` telemetry block by ``run.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def bench_serving(rows: List[Dict], smoke: bool = False) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    batch, max_seq = (2, 32) if smoke else (4, 64)
+    n_req, new_tokens = (3, 2) if smoke else (8, 4)
+    eng = ServingEngine(cfg, params, batch=batch, max_seq=max_seq)
+    rng = np.random.default_rng(0)
+    for i in range(n_req):
+        eng.submit(
+            Request(
+                uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=new_tokens,
+                temperature=0.0,
+            )
+        )
+    rep = eng.run_until_done()
+    assert rep.ok(), f"serving bench degraded: {rep}"
+
+    tick = rep.telemetry["tick_wall_us"]
+    occ = rep.telemetry["slot_occupancy"]
+    ttft = rep.telemetry["ticks_to_first_token"]
+    tokens = rep.completed * new_tokens
+    tok_per_s = tokens / (tick["mean"] * tick["count"] / 1e6) if tick["count"] else 0.0
+    rows.append({
+        "name": f"serving/decode_tick/B={batch}/req={n_req}",
+        "us_per_call": tick.get("p50", 0.0),
+        "derived": (
+            f"p50={tick.get('p50', 0):.0f}us p95={tick.get('p95', 0):.0f}us "
+            f"p99={tick.get('p99', 0):.0f}us over {tick['count']} ticks"
+        ),
+    })
+    rows.append({
+        "name": f"serving/throughput/B={batch}/req={n_req}",
+        "us_per_call": 0.0,
+        "derived": f"{tok_per_s:.1f} tok/s ({tokens} tokens, {rep.ticks} ticks)",
+    })
+    rows.append({
+        "name": f"serving/slot_occupancy/B={batch}/req={n_req}",
+        "us_per_call": 0.0,
+        "derived": (
+            f"mean={occ.get('mean', 0):.2f}/{batch} slots, "
+            f"ticks_to_first_token p50={ttft.get('p50', 0):.0f}"
+        ),
+    })

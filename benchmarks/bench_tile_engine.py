@@ -23,7 +23,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.bench_merge import timeit, _sorted_pair
+from benchmarks._timing import timeit
+from benchmarks.bench_merge import _sorted_pair
 
 TILES = (128, 512, 1024)
 LEAF = 32
@@ -43,7 +44,10 @@ def bench_tile_engine(rows: List[Dict], smoke: bool = False) -> None:
             fn = jax.jit(
                 lambda x, y, t=tile, e=engine: merge_pallas(x, y, tile=t, leaf=LEAF, engine=e)
             )
-            us[engine] = timeit(fn, a, b, iters=iters, warmup=warmup)
+            us[engine] = timeit(
+                fn, a, b, iters=iters, warmup=warmup,
+                label=f"tile_engine/keys_{engine}/T={tile}",
+            )
             rows.append({
                 "name": f"tile_engine/keys_{engine}/T={tile}",
                 "us_per_call": us[engine],
@@ -61,7 +65,10 @@ def bench_tile_engine(rows: List[Dict], smoke: bool = False) -> None:
                     ak, xv, bk, yv, tile=t, leaf=LEAF, engine=e
                 )
             )
-            us[engine] = timeit(fn, a, av, b, bv, iters=iters, warmup=warmup)
+            us[engine] = timeit(
+                fn, a, av, b, bv, iters=iters, warmup=warmup,
+                label=f"tile_engine/kv_{engine}/T={tile}",
+            )
             rows.append({
                 "name": f"tile_engine/kv_{engine}/T={tile}",
                 "us_per_call": us[engine],

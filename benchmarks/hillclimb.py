@@ -72,13 +72,17 @@ def run(arch: str, shape: str, variant: str, multi_pod: bool, out_dir: str):
     from repro.configs import TrainConfig, get_config
     from repro.launch.dryrun import cell_filename, lower_cell
 
+    from benchmarks._timing import stopwatch
+
     overrides = VARIANTS[variant] if variant != "baseline" else {}
     cfg = get_config(arch)
     if overrides.get("model"):
         cfg = dataclasses.replace(cfg, **overrides["model"])
     tcfg = TrainConfig(**overrides.get("train", {}))
-    record, _ = lower_cell(arch, shape, multi_pod, tcfg=tcfg, cfg_override=cfg)
+    with stopwatch() as sw:
+        record, _ = lower_cell(arch, shape, multi_pod, tcfg=tcfg, cfg_override=cfg)
     record["variant"] = variant
+    record["wall_s"] = round(sw.seconds, 3)
     os.makedirs(out_dir, exist_ok=True)
     fname = os.path.join(out_dir, f"{variant}__" + cell_filename(arch, shape, multi_pod))
     with open(fname, "w") as f:

@@ -10,7 +10,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 # allow `python benchmarks/run.py` from the repo root (or anywhere):
 # the repo root for the `benchmarks` package, `src` for `repro` itself
@@ -37,27 +36,30 @@ def main() -> None:
         bench_sort,
     )
     from benchmarks.bench_distributed import bench_distributed
+    from benchmarks.bench_serving import bench_serving
     from benchmarks.bench_tile_engine import bench_tile_engine
+    from benchmarks._timing import stopwatch
 
     rows = []
-    t0 = time.perf_counter()
-    for bench in (
-        bench_merge_throughput,
-        bench_tile_engine,
-        bench_distributed,
-        bench_batched_merge,
-        bench_ragged_merge,
-        bench_partition_cost,
-        bench_load_balance,
-        bench_segmented_vs_regular,
-        bench_sort,
-        bench_moe_dispatch,
-    ):
-        if args.only and args.only not in bench.__name__:
-            continue
-        print(f"# running {bench.__name__} ...", file=sys.stderr, flush=True)
-        bench(rows, smoke=args.smoke)
-    total_s = time.perf_counter() - t0
+    with stopwatch() as sw:
+        for bench in (
+            bench_merge_throughput,
+            bench_tile_engine,
+            bench_distributed,
+            bench_batched_merge,
+            bench_ragged_merge,
+            bench_partition_cost,
+            bench_load_balance,
+            bench_segmented_vs_regular,
+            bench_sort,
+            bench_moe_dispatch,
+            bench_serving,
+        ):
+            if args.only and args.only not in bench.__name__:
+                continue
+            print(f"# running {bench.__name__} ...", file=sys.stderr, flush=True)
+            bench(rows, smoke=args.smoke)
+    total_s = sw.seconds
     print(f"# total {total_s:.1f}s", file=sys.stderr)
     print("name,us_per_call,derived")
     for r in rows:
@@ -91,11 +93,14 @@ def main() -> None:
         sys.exit(1)
 
     if args.json:
+        from repro.telemetry import get_telemetry, summary as telemetry_summary
+
         payload = {
             "smoke": bool(args.smoke),
             "only": args.only,
             "total_seconds": round(total_s, 1),
             "health": health,
+            "telemetry": telemetry_summary(get_telemetry()),
             "rows": rows,
         }
         # record the perf-gate anchor rows explicitly so a snapshot is

@@ -129,6 +129,9 @@ from .segmented import _masked_window_ranks
 import repro.runtime.faults as _faults
 import repro.runtime.resilience as _res
 
+# telemetry is dependency-free (stdlib only) — no cycle risk
+from repro.telemetry import get_telemetry as _get_telemetry
+
 
 # ---------------------------------------------------------------------------
 # window partition math (shared by implementation, tests, and benchmarks)
@@ -494,6 +497,47 @@ def _resort_merge(ak, av, bk, bv):
     return _resort_rows_kv(ak, av, bk, bv)
 
 
+def _record_merge_telemetry(op, ak, bk, mesh, axis, kv):
+    """Record the Cor. 7 load-balance metrics for one eager merge.
+
+    Counters: per-device window sizes (``distributed.window_elems.dev*``)
+    and accumulated analytic exchange bytes.  Gauges: the per-call
+    exchange-byte flavors and ``distributed.balance_ratio`` — max/min of
+    the per-device window totals, which Cor. 7 pins to ~1.0 (exactly 1.0
+    when ``p | na+nb``; otherwise bounded by the ceil-div remainder).
+    The cut table comes from the same Alg. 2 bisection the exchange uses,
+    so the recorded windows are the windows that actually moved.
+    """
+    na, nb = ak.shape[-1], bk.shape[-1]
+    if na == 0 or nb == 0:
+        return
+    p = mesh.shape[axis] if mesh is not None else len(jax.devices())
+    rows = ak.shape[0]
+    n = na + nb
+    info = exchange_bytes(
+        na, nb, p, jnp.dtype(jnp.result_type(ak, bk)).itemsize, kv=kv, rows=rows
+    )
+    tel = _get_telemetry()
+    tel.counter("distributed.exchange_calls").add(1)
+    for flavor in ("gather", "window_payload", "window_wire_padded"):
+        tel.counter(f"distributed.exchange_bytes.{flavor}").add(info[flavor])
+        tel.gauge(f"distributed.exchange_bytes.{flavor}").set(info[flavor])
+    diags = np.minimum(np.arange(p + 1, dtype=np.int64) * info["seg"], n)
+    cuts = np.asarray(
+        diagonal_intersections_batched(
+            total_order_keys(ak), total_order_keys(bk), jnp.asarray(diags, jnp.int32)
+        )
+    )
+    wa = np.diff(cuts.astype(np.int64), axis=1)  # (rows, p) A-window lengths
+    wb = np.diff(diags)[None, :] - wa
+    win = (wa + wb).sum(axis=0)
+    for d in range(p):
+        tel.counter(f"distributed.window_elems.dev{d}").add(int(win[d]))
+    nz = win[win > 0]
+    ratio = float(nz.max() / nz.min()) if nz.size >= 2 else 1.0
+    tel.gauge("distributed.balance_ratio").set(ratio)
+
+
 def _guarded_merge(op, ak, av, bk, bv, mesh, axis, exchange):
     """Route one distributed merge through the guard.
 
@@ -524,9 +568,11 @@ def _guarded_merge(op, ak, av, bk, bv, mesh, axis, exchange):
     attempts = [("window", run("window"))] if exchange == "window" else []
     attempts.append(("gather", run("gather")))
     attempts.append(("core-resort", lambda: _resort_merge(ak, av, bk, bv)))
-    return _res.guarded_call(
+    out = _res.guarded_call(
         op, attempts, index=idx, verifier=_res.sorted_verifier(), verify=True
     )
+    _record_merge_telemetry(op, ak, bk, mesh, axis, kv=av is not None)
+    return out
 
 
 def distributed_merge(

@@ -24,12 +24,13 @@ require ``tile | 2 * width``).
 from __future__ import annotations
 
 import sys
-import time
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.telemetry import wall_seconds
 
 from .merge_path import DEFAULT_LEAF, DEFAULT_TILE, _interp, merge_pallas
 
@@ -90,9 +91,9 @@ def _time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = wall_seconds()
         jax.block_until_ready(fn(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
+        ts.append((wall_seconds() - t0) * 1e6)
     return float(np.median(ts))
 
 

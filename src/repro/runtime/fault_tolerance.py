@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.telemetry import wall_seconds
 
 
 @dataclasses.dataclass
@@ -20,7 +21,7 @@ class HeartbeatMonitor:
 
     num_hosts: int
     timeout: float = 60.0
-    clock: Callable[[], float] = time.monotonic
+    clock: Callable[[], float] = wall_seconds
 
     def __post_init__(self):
         now = self.clock()

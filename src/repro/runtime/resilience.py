@@ -67,6 +67,7 @@ import jax
 
 from repro.core import merge_path as _mp
 from repro.runtime import faults as _faults
+from repro.telemetry import get_telemetry
 
 __all__ = [
     "FallbackWarning",
@@ -170,28 +171,33 @@ class OpHealth:
         }
 
 
-_HEALTH: Dict[str, OpHealth] = {}
+# Per-op health records live in the active telemetry registry
+# (``get_telemetry().health``) so traces, bench summaries, and the
+# ``python -m repro.telemetry`` CLI all see the same counters; these
+# helpers keep the PR 8 call sites working unchanged.
 
 
 def health(op: str) -> OpHealth:
     """The (auto-created) health record for ``op``."""
-    rec = _HEALTH.get(op)
+    store = get_telemetry().health
+    rec = store.get(op)
     if rec is None:
-        rec = _HEALTH[op] = OpHealth()
+        rec = store[op] = OpHealth()
     return rec
 
 
 def reset_health() -> None:
     """Zero every per-op health record."""
-    _HEALTH.clear()
+    get_telemetry().health.clear()
 
 
 def health_summary() -> dict:
     """``{op: counters}`` plus a ``"totals"`` roll-up across all ops."""
+    store = get_telemetry().health
     totals = OpHealth()
     per_op = {}
-    for op in sorted(_HEALTH):
-        rec = _HEALTH[op]
+    for op in sorted(store):
+        rec = store[op]
         per_op[op] = rec.as_dict()
         totals.calls += rec.calls
         totals.fallbacks += rec.fallbacks
@@ -379,47 +385,52 @@ def guarded_call(
     log: List[str] = []
     last_err: Optional[BaseException] = None
     n_att = len(attempts)
-    for i, (label, thunk) in enumerate(attempts):
-        last = i == n_att - 1
-        reasons = preflight(op, meta, label, index)
-        if reasons:
-            rec.precondition_rejects += 1
-            log.append(f"{label}: preflight rejected ({'; '.join(reasons)})")
-            continue
-        if _faults.should_fire("launch", op, index, label=label, last=last):
-            rec.faults_injected += 1
-            rec.launch_failures += 1
-            err = _faults.InjectedFault(f"injected launch failure: {op}[{index}] {label}")
-            last_err = err
-            log.append(f"{label}: {err}")
-            continue
-        try:
-            out = thunk()
-        except Exception as err:  # the one sanctioned launch-catch (L006)
-            rec.launch_failures += 1
-            last_err = err
-            log.append(f"{label}: {type(err).__name__}: {err}")
-            continue
-        if _faults.should_fire("exchange", op, index, label=label, last=last):
-            rec.faults_injected += 1
-            out = _faults.corrupt(out, f"{op}:{index}:{label}")
-        if run_verify and verifier is not None:
-            problem = verifier(out)
-            if problem is not None:
-                rec.verify_failures += 1
-                last_err = VerificationError(f"{op}[{index}] {label}: {problem}")
-                log.append(f"{label}: verify failed ({problem})")
+    attrs = {k: v for k, v in (meta or {}).items() if v is not None}
+    with get_telemetry().span(f"op/{op}", index=index, **attrs) as sp:
+        for i, (label, thunk) in enumerate(attempts):
+            last = i == n_att - 1
+            reasons = preflight(op, meta, label, index)
+            if reasons:
+                rec.precondition_rejects += 1
+                log.append(f"{label}: preflight rejected ({'; '.join(reasons)})")
                 continue
-        rec.served_by[label] = rec.served_by.get(label, 0) + 1
-        if i > 0:
-            rec.fallbacks += 1
-            edge = f"{attempts[0][0]}->{label}"
-            rec.fallback_edges[edge] = rec.fallback_edges.get(edge, 0) + 1
-            warnings.warn(
-                f"guarded dispatch: {op}[{index}] degraded {edge} ({log[-1] if log else 'unknown'})",
-                FallbackWarning,
-                stacklevel=3,
-            )
-        return out
-    rec.exhausted += 1
+            if _faults.should_fire("launch", op, index, label=label, last=last):
+                rec.faults_injected += 1
+                rec.launch_failures += 1
+                err = _faults.InjectedFault(f"injected launch failure: {op}[{index}] {label}")
+                last_err = err
+                log.append(f"{label}: {err}")
+                continue
+            try:
+                out = thunk()
+            except Exception as err:  # the one sanctioned launch-catch (L006)
+                rec.launch_failures += 1
+                last_err = err
+                log.append(f"{label}: {type(err).__name__}: {err}")
+                continue
+            if _faults.should_fire("exchange", op, index, label=label, last=last):
+                rec.faults_injected += 1
+                out = _faults.corrupt(out, f"{op}:{index}:{label}")
+            if run_verify and verifier is not None:
+                problem = verifier(out)
+                if problem is not None:
+                    rec.verify_failures += 1
+                    last_err = VerificationError(f"{op}[{index}] {label}: {problem}")
+                    log.append(f"{label}: verify failed ({problem})")
+                    continue
+            rec.served_by[label] = rec.served_by.get(label, 0) + 1
+            sp.set("served_by", label)
+            if i > 0:
+                rec.fallbacks += 1
+                edge = f"{attempts[0][0]}->{label}"
+                rec.fallback_edges[edge] = rec.fallback_edges.get(edge, 0) + 1
+                sp.set("degraded", edge)
+                warnings.warn(
+                    f"guarded dispatch: {op}[{index}] degraded {edge} ({log[-1] if log else 'unknown'})",
+                    FallbackWarning,
+                    stacklevel=3,
+                )
+            return out
+        rec.exhausted += 1
+        sp.set("exhausted", True)
     raise GuardedDispatchError(op, log) from last_err

@@ -48,6 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.models import forward_decode, forward_prefill, init_caches
 from repro.runtime import faults as _faults
 from repro.runtime.resilience import FallbackWarning
+from repro.telemetry import WALL, TickClock, get_telemetry
 from repro.train.steps import _cast
 from . import sampler as sampler_mod
 
@@ -78,6 +79,9 @@ class ServingReport:
     retries: int = 0
     statuses: Dict[int, str] = dataclasses.field(default_factory=dict)
     reasons: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # serving metric block (tick histograms + occupancy/queue gauges),
+    # folded in by run_until_done from the active telemetry registry
+    telemetry: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def ok(self) -> bool:
         """True when every request completed and no tick was retried."""
@@ -116,6 +120,10 @@ class ServingEngine:
         self.retries = 0
         self._cooldown = 0
         self._fail_streak = 0
+        # Deterministic span clock: while the engine steps, telemetry
+        # timestamps count engine ticks (never wall time), so a
+        # fault-injected run replays to a byte-identical trace.
+        self.tick_clock = TickClock()
         self._decode = jax.jit(
             lambda params, caches, tok, pos: forward_decode(cfg, params, caches, tok, pos)
         )
@@ -194,13 +202,22 @@ class ServingEngine:
 
     def _tick_body(self) -> None:
         """Refill free slots, then one lockstep decode."""
+        tel = get_telemetry()
         for slot in range(self.batch):
             if self.active[slot] is None and self.pending:
                 req = self.pending.pop(0)
                 self._fill_slot(slot, req)
                 first = self._sample(req, req._next_from_prefill)
                 req.generated.append(first)
+                tel.histogram("serving.ticks_to_first_token").record(
+                    self.ticks - getattr(req, "_submit_tick", 0)
+                )
+                req._last_tok_tick = self.ticks
         occupied = [s for s in range(self.batch) if self.active[s] is not None]
+        # sampled *after* refill: a request admitted and finished within one
+        # tick still counts toward the occupancy it actually used
+        tel.gauge("serving.slot_occupancy").set(len(occupied))
+        tel.histogram("serving.slot_occupancy").record(len(occupied))
         if not occupied:
             return
         token = np.zeros((self.batch, 1), np.int32)
@@ -215,6 +232,10 @@ class ServingEngine:
             self.pos[s] += 1
             nxt = self._sample(req, logits_np[s])
             req.generated.append(nxt)
+            tel.histogram("serving.ticks_per_token").record(
+                self.ticks - getattr(req, "_last_tok_tick", self.ticks)
+            )
+            req._last_tok_tick = self.ticks
             if len(req.generated) >= req.max_new_tokens or self.pos[s] >= self.max_seq - 1:
                 self._finish(req, "completed")
                 self.active[s] = None
@@ -253,19 +274,39 @@ class ServingEngine:
         requests forever.
         """
         self.ticks += 1
-        self._expire_deadlines()
-        if self._cooldown > 0:
-            self._cooldown -= 1
-            return
-        idx = _faults.next_index("serving.decode")
-        try:
-            if _faults.should_fire("launch", "serving.decode", idx, label="decode"):
-                raise _faults.InjectedFault(f"injected launch failure: serving.decode[{idx}]")
-            self._tick_body()
-        except Exception as err:
-            self._on_step_failure(err)
-            return
-        self._fail_streak = 0
+        tel = get_telemetry()
+        self.tick_clock.advance(self.ticks)
+        occupied = sum(a is not None for a in self.active)
+        queue_depth = len(self.pending)
+        tel.gauge("serving.queue_depth").set(queue_depth)
+        tel.histogram("serving.queue_depth").record(queue_depth)
+        wall0 = WALL.now()
+        with tel.use_clock(self.tick_clock), tel.span(
+            "serving.tick",
+            tick=self.ticks,
+            occupied=occupied,
+            queue_depth=queue_depth,
+        ) as sp:
+            self._expire_deadlines()
+            if self._cooldown > 0:
+                self._cooldown -= 1
+                sp.set("cooldown", True)
+                tel.counter("serving.cooldown_ticks").add(1)
+                return
+            idx = _faults.next_index("serving.decode")
+            try:
+                if _faults.should_fire("launch", "serving.decode", idx, label="decode"):
+                    raise _faults.InjectedFault(f"injected launch failure: serving.decode[{idx}]")
+                self._tick_body()
+            except Exception as err:
+                sp.set("failed", type(err).__name__)
+                self._on_step_failure(err)
+                return
+            finally:
+                # wall duration goes to a histogram only — never into the
+                # (tick-clocked, byte-identical) trace event stream
+                tel.histogram("serving.tick_wall_us").record(WALL.now() - wall0)
+            self._fail_streak = 0
 
     # -- draining ---------------------------------------------------------
 
@@ -293,17 +334,27 @@ class ServingEngine:
         and still-queued requests are marked ``shed``, all landing in
         ``self.done`` with explicit reasons.
         """
-        for _ in range(max_ticks):
-            if not self.pending and all(a is None for a in self.active):
-                break
-            self.step()
-        else:
-            for slot in range(self.batch):
-                req = self.active[slot]
-                if req is not None:
-                    self._finish(req, "timed_out", f"engine out of ticks (max_ticks={max_ticks})")
-                    self.active[slot] = None
-            for req in self.pending:
-                self._finish(req, "shed", f"never scheduled within max_ticks={max_ticks}")
-            self.pending = []
-        return self._report()
+        tel = get_telemetry()
+        with tel.use_clock(self.tick_clock), tel.span("serving.run", batch=self.batch):
+            for _ in range(max_ticks):
+                if not self.pending and all(a is None for a in self.active):
+                    break
+                self.step()
+            else:
+                for slot in range(self.batch):
+                    req = self.active[slot]
+                    if req is not None:
+                        self._finish(req, "timed_out", f"engine out of ticks (max_ticks={max_ticks})")
+                        self.active[slot] = None
+                for req in self.pending:
+                    self._finish(req, "shed", f"never scheduled within max_ticks={max_ticks}")
+                self.pending = []
+        rep = self._report()
+        rep.telemetry = {
+            "tick_wall_us": tel.histogram("serving.tick_wall_us").stats(),
+            "ticks_to_first_token": tel.histogram("serving.ticks_to_first_token").stats(),
+            "ticks_per_token": tel.histogram("serving.ticks_per_token").stats(),
+            "slot_occupancy": tel.histogram("serving.slot_occupancy").stats(),
+            "queue_depth": tel.histogram("serving.queue_depth").stats(),
+        }
+        return rep

@@ -1,0 +1,51 @@
+"""repro.telemetry — dependency-free structured telemetry.
+
+Spans (pluggable wall/tick clock), counters, gauges, exact-percentile
+histograms, Chrome/Perfetto trace export, and the guarded-dispatch
+health registry.  See ``docs/observability.md`` for the metric catalog
+and ``python -m repro.telemetry --help`` for the trace CLI.
+"""
+
+from .spans import (
+    TICK_SCALE,
+    WALL,
+    Counter,
+    Gauge,
+    Histogram,
+    Span,
+    Telemetry,
+    TickClock,
+    WallClock,
+    get_telemetry,
+    reset_telemetry,
+    use,
+    wall_seconds,
+)
+from .export import (
+    chrome_trace,
+    load_trace,
+    summary,
+    trace_json_bytes,
+    write_trace,
+)
+
+__all__ = [
+    "TICK_SCALE",
+    "WALL",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Span",
+    "Telemetry",
+    "TickClock",
+    "WallClock",
+    "chrome_trace",
+    "get_telemetry",
+    "load_trace",
+    "reset_telemetry",
+    "summary",
+    "trace_json_bytes",
+    "use",
+    "wall_seconds",
+    "write_trace",
+]

@@ -1,0 +1,94 @@
+"""Trace export: Chrome/Perfetto ``trace_event`` JSON and flat summaries.
+
+The exported trace is loadable in ``chrome://tracing`` / Perfetto's
+legacy-JSON importer: closed spans become complete ``"X"`` events with
+``ts``/``dur`` in trace microseconds, unclosed spans become lone ``"B"``
+events (Perfetto renders them open-ended, and ``--check`` flags them).
+
+Byte-identity contract: everything serialized here is a pure function of
+the recorded event stream — timestamps come from the registry's clock
+(deterministic under :class:`repro.telemetry.TickClock`), keys are
+sorted, separators fixed.  Wall-clock-derived *histograms* are therefore
+excluded from the trace file body (they go in :func:`summary`, which
+feeds ``BENCH_*.json`` where nondeterminism is expected); a tick-clocked
+trace of a deterministic workload serializes to identical bytes on every
+replay.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from .spans import Telemetry
+
+
+def _health_dict(tel: Telemetry) -> Dict[str, dict]:
+    return {op: h.as_dict() for op, h in sorted(tel.health.items())}
+
+
+def chrome_trace(tel: Telemetry) -> dict:
+    """Chrome ``trace_event`` JSON object (deterministic content only)."""
+    events = []
+    for sp in tel.spans:
+        ev = {
+            "name": sp.name,
+            "cat": "repro",
+            "pid": 1,
+            "tid": 1 + sp.depth,
+            "ts": sp.start,
+            "args": sp.attrs,
+        }
+        if sp.end is None:
+            ev["ph"] = "B"
+        else:
+            ev["ph"] = "X"
+            ev["dur"] = sp.end - sp.start
+        events.append(ev)
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "clock": tel.clock.kind,
+            "unclosed_spans": len(tel.unclosed()),
+            "spans": tel.span_stats(),
+            "counters": {k: c.value for k, c in tel.counters.items()},
+            "gauges": {k: g.as_dict() for k, g in tel.gauges.items()},
+            "health": _health_dict(tel),
+        },
+    }
+
+
+def summary(tel: Telemetry) -> dict:
+    """Flat summary dict (the ``telemetry`` block of ``BENCH_*.json``).
+
+    Unlike :func:`chrome_trace` this includes histogram stats, which may
+    carry wall-time samples.
+    """
+    return {
+        "clock": tel.clock.kind,
+        "unclosed_spans": len(tel.unclosed()),
+        "spans": tel.span_stats(),
+        "counters": {k: c.value for k, c in tel.counters.items()},
+        "gauges": {k: g.as_dict() for k, g in tel.gauges.items()},
+        "histograms": {k: h.stats() for k, h in tel.histograms.items()},
+        "health": _health_dict(tel),
+    }
+
+
+def trace_json_bytes(tel: Telemetry) -> bytes:
+    """Canonical serialized trace — sorted keys, fixed separators, so two
+    identical event streams compare equal as raw bytes."""
+    return json.dumps(
+        chrome_trace(tel), sort_keys=True, separators=(",", ":")
+    ).encode("utf-8")
+
+
+def write_trace(tel: Telemetry, path) -> None:
+    with open(path, "wb") as f:
+        f.write(trace_json_bytes(tel))
+
+
+def load_trace(path) -> dict:
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)

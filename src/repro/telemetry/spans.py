@@ -1,0 +1,340 @@
+"""Structured telemetry core: spans, counters, gauges, histograms.
+
+Dependency-free (stdlib only) so every layer of the stack — kernels,
+core, runtime, serving, benchmarks — can record into it without import
+cycles or accelerator baggage.  One :class:`Telemetry` registry holds
+
+* **spans** — nestable timed regions recorded through a pluggable clock
+  (:class:`WallClock` by default; the :class:`ServingEngine` installs its
+  deterministic :class:`TickClock` while serving so traces replay
+  bit-identically under the ``REPRO_FAULTS`` injector);
+* **counters** — monotonically accumulating integers/floats;
+* **gauges** — last/min/max of a sampled value (queue depth, slot
+  occupancy, the Cor. 7 window balance ratio);
+* **histograms** — fixed-bucket counts *plus* the raw samples, so
+  ``percentile`` extraction is exact (numpy-compatible linear
+  interpolation) rather than bucket-quantized;
+* **health** — the per-op :class:`repro.runtime.resilience.OpHealth`
+  records of the guarded dispatch layer live in this registry too (PR 8's
+  counters merged into the same place; duck-typed so telemetry itself
+  stays dependency-free).
+
+The active registry is process-global (:func:`get_telemetry`); tests and
+replay harnesses push a fresh instance with :func:`use`.
+
+Clock semantics
+---------------
+``Clock.now()`` returns *trace microseconds*.  :class:`WallClock` is
+``time.perf_counter()`` scaled to us — this module and
+``benchmarks/_timing.py`` are the only places allowed to touch the raw
+wall clock (lint rule L007).  :class:`TickClock` maps one engine tick to
+:data:`TICK_SCALE` trace-us and disambiguates events inside a tick with a
+per-tick sequence number, so the timestamp stream is a pure function of
+the event stream — no wall time leaks into a tick-clocked trace.
+"""
+
+from __future__ import annotations
+
+import bisect
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+TICK_SCALE = 1_000_000  # one engine tick rendered as this many trace-us
+
+
+class WallClock:
+    """Wall time in microseconds (the sanctioned ``perf_counter`` site)."""
+
+    kind = "wall"
+
+    def now(self) -> float:
+        return time.perf_counter() * 1e6
+
+
+WALL = WallClock()
+
+
+def wall_seconds() -> float:
+    """Monotonic wall seconds — the repo-wide replacement for raw
+    ``time.perf_counter()`` / ``time.monotonic()`` call sites (L007)."""
+    return time.perf_counter()
+
+
+class TickClock:
+    """Deterministic clock counted in engine ticks, not wall time.
+
+    ``now()`` returns ``tick * TICK_SCALE + seq`` where ``seq`` increments
+    per read and resets on :meth:`advance` — strictly monotonic within a
+    tick, and a pure function of the call sequence, so two replays of the
+    same workload produce byte-identical timestamp streams.
+    """
+
+    kind = "tick"
+
+    def __init__(self) -> None:
+        self.tick = 0
+        self._seq = 0
+
+    def advance(self, tick: Optional[int] = None) -> None:
+        self.tick = self.tick + 1 if tick is None else int(tick)
+        self._seq = 0
+
+    def now(self) -> int:
+        ts = self.tick * TICK_SCALE + self._seq
+        self._seq += 1
+        return ts
+
+
+class Span:
+    """One timed region; ``end is None`` while (or if never) closed."""
+
+    __slots__ = ("name", "start", "end", "depth", "attrs")
+
+    def __init__(self, name: str, start, depth: int, attrs: Dict[str, object]):
+        self.name = name
+        self.start = start
+        self.end = None
+        self.depth = depth
+        self.attrs = attrs
+
+    def set(self, key: str, value: object) -> None:
+        """Attach/overwrite one attribute (e.g. the dispatch label that
+        actually served a guarded call)."""
+        self.attrs[key] = value
+
+    @property
+    def duration(self):
+        return None if self.end is None else self.end - self.start
+
+
+class Counter:
+    """Accumulating value; ``add`` only (use a :class:`Gauge` to sample)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def add(self, v=1) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Last/min/max of a sampled value."""
+
+    __slots__ = ("last", "min", "max")
+
+    def __init__(self) -> None:
+        self.last = None
+        self.min = None
+        self.max = None
+
+    def set(self, v) -> None:
+        self.last = v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def as_dict(self) -> dict:
+        return {"last": self.last, "min": self.min, "max": self.max}
+
+
+# 1-2-5 bucket ladder from 1 us to 1e7 us (10 s); the last bucket is open.
+DEFAULT_BOUNDS = tuple(
+    m * 10**e for e in range(8) for m in (1, 2, 5)
+)
+
+
+class Histogram:
+    """Fixed-bucket histogram that also keeps the raw samples.
+
+    Buckets make cross-process merging and trace export cheap; the raw
+    samples make :meth:`percentile` *exact* — linear interpolation on the
+    sorted samples, matching ``numpy.percentile``'s default method.
+    """
+
+    __slots__ = ("bounds", "bucket_counts", "samples")
+
+    def __init__(self, bounds=DEFAULT_BOUNDS):
+        self.bounds = tuple(bounds)
+        self.bucket_counts = [0] * (len(self.bounds) + 1)
+        self.samples: List[float] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def record(self, v) -> None:
+        v = float(v)
+        self.samples.append(v)
+        self.bucket_counts[bisect.bisect_left(self.bounds, v)] += 1
+
+    def percentile(self, q: float) -> float:
+        """Exact q-th percentile (numpy 'linear' interpolation)."""
+        if not self.samples:
+            return 0.0
+        s = sorted(self.samples)
+        h = (len(s) - 1) * (q / 100.0)
+        lo = int(h)
+        if lo >= len(s) - 1:
+            return s[-1]
+        return s[lo] + (h - lo) * (s[lo + 1] - s[lo])
+
+    def stats(self) -> dict:
+        """Flat summary row: count/mean/min/max + p50/p95/p99 + buckets."""
+        if not self.samples:
+            return {"count": 0}
+        return {
+            "count": len(self.samples),
+            "mean": sum(self.samples) / len(self.samples),
+            "min": min(self.samples),
+            "max": max(self.samples),
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+            "buckets": [
+                [self.bounds[i] if i < len(self.bounds) else None, c]
+                for i, c in enumerate(self.bucket_counts)
+                if c
+            ],
+        }
+
+
+class Telemetry:
+    """One registry of spans + counters + gauges + histograms + op health."""
+
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else WallClock()
+        self.spans: List[Span] = []
+        self._stack: List[Span] = []
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+        # guarded-dispatch OpHealth records (duck-typed: anything with
+        # .as_dict()); populated by repro.runtime.resilience
+        self.health: Dict[str, object] = {}
+
+    # -- instruments ------------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self.gauges.get(name)
+        if g is None:
+            g = self.gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, bounds=DEFAULT_BOUNDS) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(bounds)
+        return h
+
+    # -- spans ------------------------------------------------------------
+
+    def begin(self, name: str, **attrs) -> Span:
+        sp = Span(name, self.clock.now(), len(self._stack), dict(attrs))
+        self.spans.append(sp)
+        self._stack.append(sp)
+        return sp
+
+    def end(self, sp: Span) -> None:
+        sp.end = self.clock.now()
+        # tolerate out-of-order ends (an exception unwinding several spans)
+        while self._stack:
+            top = self._stack.pop()
+            if top is sp:
+                break
+
+    @contextmanager
+    def span(self, name: str, **attrs) -> Iterator[Span]:
+        sp = self.begin(name, **attrs)
+        try:
+            yield sp
+        finally:
+            self.end(sp)
+
+    def unclosed(self) -> List[Span]:
+        return [sp for sp in self.spans if sp.end is None]
+
+    def span_stats(self) -> Dict[str, dict]:
+        """Per-name span aggregate: count + total duration (trace-us)."""
+        out: Dict[str, dict] = {}
+        for sp in self.spans:
+            rec = out.setdefault(sp.name, {"count": 0, "total_us": 0})
+            rec["count"] += 1
+            if sp.end is not None:
+                rec["total_us"] += sp.end - sp.start
+        return out
+
+    # -- clock plumbing ---------------------------------------------------
+
+    @contextmanager
+    def use_clock(self, clock) -> Iterator[None]:
+        prev, self.clock = self.clock, clock
+        try:
+            yield
+        finally:
+            self.clock = prev
+
+    # -- lifecycle / cross-process merge ----------------------------------
+
+    def reset(self) -> None:
+        self.spans.clear()
+        self._stack.clear()
+        self.counters.clear()
+        self.gauges.clear()
+        self.histograms.clear()
+        self.health.clear()
+
+    def snapshot(self) -> dict:
+        """JSON-able state for shipping across a process boundary
+        (``benchmarks/bench_distributed.py``'s forced-mesh subprocess)."""
+        return {
+            "counters": {k: c.value for k, c in self.counters.items()},
+            "gauges": {k: g.as_dict() for k, g in self.gauges.items()},
+            "histograms": {k: {"samples": list(h.samples)} for k, h in self.histograms.items()},
+            "spans": self.span_stats(),
+        }
+
+    def merge_snapshot(self, snap: dict) -> None:
+        """Fold another process's :meth:`snapshot` into this registry."""
+        for k, v in (snap.get("counters") or {}).items():
+            self.counter(k).add(v)
+        for k, d in (snap.get("gauges") or {}).items():
+            g = self.gauge(k)
+            for key in ("min", "last", "max"):  # preserves merged min/max
+                if d.get(key) is not None:
+                    g.set(d[key])
+        for k, d in (snap.get("histograms") or {}).items():
+            h = self.histogram(k)
+            for s in d.get("samples") or ():
+                h.record(s)
+
+
+_CURRENT: List[Telemetry] = [Telemetry()]
+
+
+def get_telemetry() -> Telemetry:
+    """The active registry (process-global root unless :func:`use`-d)."""
+    return _CURRENT[-1]
+
+
+@contextmanager
+def use(tel: Telemetry) -> Iterator[Telemetry]:
+    """Install ``tel`` as the active registry for the block (tests, replay
+    harnesses, anything needing an isolated event stream)."""
+    _CURRENT.append(tel)
+    try:
+        yield tel
+    finally:
+        _CURRENT.pop()
+
+
+def reset_telemetry() -> None:
+    """Zero the active registry in place."""
+    get_telemetry().reset()

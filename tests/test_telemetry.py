@@ -1,0 +1,312 @@
+"""Telemetry subsystem: spans, metrics, deterministic traces (PR 9).
+
+Covers the core registry (span nesting/ordering, counters, exact
+percentiles vs numpy), the Perfetto export round trip, the byte-identity
+contract — a fault-injected serving workload replayed under the tick
+clock serializes to identical bytes — the Cor. 7 balance gauge recorded
+by the distributed layer, the ``python -m repro.telemetry`` CLI, the
+cross-process snapshot/merge path used by ``bench_distributed``, and
+lint rule L007 (no raw wall-clock reads outside the telemetry layer).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools import lint_rules  # noqa: E402
+
+from repro import telemetry  # noqa: E402
+from repro.telemetry import (  # noqa: E402
+    TICK_SCALE,
+    Histogram,
+    Telemetry,
+    TickClock,
+    chrome_trace,
+    get_telemetry,
+    summary,
+    trace_json_bytes,
+    write_trace,
+)
+from repro.telemetry.__main__ import main as telemetry_cli  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# core registry
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_depth_and_ordering():
+    tel = Telemetry(clock=TickClock())
+    with tel.span("outer", kind="test") as outer:
+        with tel.span("inner") as inner:
+            pass
+        with tel.span("inner") as inner2:
+            inner2.set("served_by", "core")
+    assert [sp.name for sp in tel.spans] == ["outer", "inner", "inner"]
+    assert outer.depth == 0 and inner.depth == 1 and inner2.depth == 1
+    # TickClock timestamps are strictly increasing per read
+    assert outer.start < inner.start < inner.end < inner2.start < inner2.end < outer.end
+    assert outer.attrs == {"kind": "test"}
+    assert inner2.attrs["served_by"] == "core"
+    stats = tel.span_stats()
+    assert stats["inner"]["count"] == 2
+    assert stats["outer"]["count"] == 1
+    assert tel.unclosed() == []
+
+
+def test_unclosed_span_detection_and_exception_unwind():
+    tel = Telemetry(clock=TickClock())
+    dangling = tel.begin("dangling")
+    assert tel.unclosed() == [dangling]
+    # an exception that unwinds several nested spans leaves none half-open
+    with pytest.raises(RuntimeError):
+        with tel.span("a"):
+            with tel.span("b"):
+                raise RuntimeError("boom")
+    assert tel.unclosed() == [dangling]
+    assert chrome_trace(tel)["otherData"]["unclosed_spans"] == 1
+
+
+def test_counters_and_gauges_exact():
+    tel = Telemetry()
+    tel.counter("c").add()
+    tel.counter("c").add(41)
+    assert tel.counters["c"].value == 42
+    g = tel.gauge("g")
+    for v in (3, 1, 2):
+        g.set(v)
+    assert g.as_dict() == {"last": 2, "min": 1, "max": 3}
+
+
+def test_tick_clock_is_pure_function_of_event_stream():
+    c1, c2 = TickClock(), TickClock()
+    for c in (c1, c2):
+        c.advance(5)
+    assert c1.now() == c2.now() == 5 * TICK_SCALE
+    assert c1.now() == 5 * TICK_SCALE + 1
+    c1.advance(6)
+    assert c1.now() == 6 * TICK_SCALE  # seq resets on advance
+
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(7)
+    samples = rng.exponential(scale=500.0, size=257)
+    h = Histogram()
+    for s in samples:
+        h.record(s)
+    for q in (0, 10, 50, 95, 99, 100):
+        assert h.percentile(q) == pytest.approx(np.percentile(samples, q), rel=1e-12)
+    st = h.stats()
+    assert st["count"] == len(samples)
+    assert st["mean"] == pytest.approx(samples.mean())
+    assert sum(c for _, c in st["buckets"]) == len(samples)
+
+
+def test_use_installs_isolated_registry():
+    root = get_telemetry()
+    with telemetry.use(Telemetry()) as tel:
+        assert get_telemetry() is tel is not root
+        tel.counter("x").add()
+    assert get_telemetry() is root
+    assert "x" not in root.counters
+
+
+# ---------------------------------------------------------------------------
+# export / round trip
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_round_trips_through_json(tmp_path):
+    tel = Telemetry(clock=TickClock())
+    tel.counter("calls").add(3)
+    tel.gauge("depth").set(2)
+    with tel.span("tick", tick=1):
+        with tel.span("op/merge", n=128):
+            pass
+    trace = chrome_trace(tel)
+    assert json.loads(trace_json_bytes(tel)) == trace
+    evs = trace["traceEvents"]
+    assert [e["ph"] for e in evs] == ["X", "X"]
+    assert evs[0]["tid"] == 1 and evs[1]["tid"] == 2  # tid = 1 + depth
+    # TickClock hands out 0,1,2,3 → outer spans [0,3], inner [1,2]
+    assert (evs[0]["ts"], evs[0]["dur"]) == (0, 3)
+    assert (evs[1]["ts"], evs[1]["dur"]) == (1, 1)
+    p = tmp_path / "t.json"
+    write_trace(tel, p)
+    assert json.loads(p.read_bytes()) == trace
+    # histograms are summary-only: never in the trace body
+    tel.histogram("wall_us").record(123.0)
+    assert "histograms" not in chrome_trace(tel)["otherData"]
+    assert summary(tel)["histograms"]["wall_us"]["count"] == 1
+
+
+def test_snapshot_merge_across_process_boundary():
+    src = Telemetry()
+    src.counter("distributed.exchange_calls").add(4)
+    src.gauge("distributed.balance_ratio").set(1.0)
+    src.gauge("distributed.balance_ratio").set(1.02)
+    src.histogram("bench/x").record(10.0)
+    src.histogram("bench/x").record(20.0)
+    snap = json.loads(json.dumps(src.snapshot()))  # as it crosses the pipe
+    dst = Telemetry()
+    dst.counter("distributed.exchange_calls").add(1)
+    dst.merge_snapshot(snap)
+    assert dst.counters["distributed.exchange_calls"].value == 5
+    g = dst.gauges["distributed.balance_ratio"].as_dict()
+    assert g["min"] == 1.0 and g["max"] == 1.02 and g["last"] == 1.02
+    assert dst.histograms["bench/x"].count == 2
+
+
+# ---------------------------------------------------------------------------
+# instrumented layers
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_merge_records_balance_and_windows():
+    from repro.core import distributed_merge
+
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(np.sort(rng.standard_normal(256)).astype(np.float32))
+    b = jnp.asarray(np.sort(rng.standard_normal(192)).astype(np.float32))
+    with telemetry.use(Telemetry()) as tel:
+        out = distributed_merge(a, b)
+        assert np.asarray(out).shape == (448,)
+        bal = tel.gauges["distributed.balance_ratio"].as_dict()
+        assert bal["max"] is not None and bal["max"] <= 1.05  # Cor. 7
+        # every element lands in exactly one device window
+        windows = [
+            c.value for k, c in tel.counters.items()
+            if k.startswith("distributed.window_elems.dev")
+        ]
+        assert sum(windows) == 448
+        assert tel.counters["distributed.exchange_bytes.window_payload"].value > 0
+        assert any(name.startswith("op/") for name in tel.span_stats())
+        assert tel.unclosed() == []
+
+
+def test_guarded_call_span_carries_dispatch_label():
+    from repro.runtime import resilience as res
+
+    with telemetry.use(Telemetry()) as tel:
+        out = res.guarded_call(
+            "merge", [("pallas", lambda: 7)], meta={"n": 4, "tile": None}
+        )
+        assert out == 7
+        (sp,) = [s for s in tel.spans if s.name == "op/merge"]
+        assert sp.attrs["served_by"] == "pallas"
+        assert sp.attrs["n"] == 4 and "tile" not in sp.attrs  # None filtered
+        assert tel.health["merge"].calls == 1
+
+
+def _serving_run(params, cfg):
+    """One deterministic fault-injected serving workload; returns
+    (report, trace bytes) recorded in a fresh registry."""
+    from repro.runtime import faults
+    from repro.serving.engine import Request, ServingEngine
+
+    with telemetry.use(Telemetry()) as tel, faults.inject("launch:serving.decode:1"):
+        eng = ServingEngine(cfg, params, batch=2, max_seq=32)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(uid=i,
+                               prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                               max_new_tokens=2, temperature=0.0))
+        rep = eng.run_until_done()
+        return rep, trace_json_bytes(tel)
+
+
+def test_fault_injected_replay_is_byte_identical():
+    """The acceptance bar: same workload + same fault plan, replayed in a
+    fresh registry under the engine tick clock, serializes to *identical
+    bytes* — timestamps are a pure function of the event stream."""
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    rep1, raw1 = _serving_run(params, cfg)
+    rep2, raw2 = _serving_run(params, cfg)
+    assert rep1.completed == 3 == rep2.completed
+    assert raw1 == raw2
+    trace = json.loads(raw1)
+    assert trace["otherData"]["unclosed_spans"] == 0
+    ticks = [e for e in trace["traceEvents"] if e["name"] == "serving.tick"]
+    assert len(ticks) == rep1.ticks
+    # tick span timestamps sit exactly on the tick grid
+    assert all(e["ts"] % TICK_SCALE < TICK_SCALE // 2 for e in ticks)
+    # the ServingReport carries the summary block
+    for key in ("tick_wall_us", "ticks_to_first_token", "ticks_per_token",
+                "slot_occupancy", "queue_depth"):
+        assert key in rep1.telemetry, rep1.telemetry.keys()
+    assert rep1.telemetry["ticks_to_first_token"]["count"] == 3
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _write(tel, path):
+    write_trace(tel, path)
+    return str(path)
+
+
+def test_cli_check_and_diff(tmp_path, capsys):
+    tel = Telemetry(clock=TickClock())
+    with tel.span("tick"):
+        pass
+    tel.gauge("distributed.balance_ratio").set(1.01)
+    good = _write(tel, tmp_path / "good.json")
+    assert telemetry_cli(["--check", good]) == 0
+    assert "balance_ratio max=1.0100" in capsys.readouterr().out
+
+    # unhealthy: an unclosed span and a Cor. 7 violation
+    tel.begin("leaky")
+    tel.gauge("distributed.balance_ratio").set(1.5)
+    bad = _write(tel, tmp_path / "bad.json")
+    assert telemetry_cli(["--check", bad]) == 1
+    out = capsys.readouterr().out
+    assert "unclosed span" in out and "Cor. 7" in out
+
+    # summarize + diff modes exit 0 and name the drifted metric
+    assert telemetry_cli([good]) == 0
+    assert telemetry_cli([good, bad]) == 0
+    out = capsys.readouterr().out
+    assert "distributed.balance_ratio" in out and "leaky" in out
+
+
+# ---------------------------------------------------------------------------
+# lint rule L007
+# ---------------------------------------------------------------------------
+
+
+def _lint(src, path="src/repro/core/fixture.py"):
+    return lint_rules.lint_source(src, path)
+
+
+def test_l007_fires_on_raw_wall_clock():
+    vs = _lint("import time\nt0 = time.perf_counter()\n")
+    assert any(v.rule == "L007" for v in vs)
+    vs = _lint("import time\nt0 = time.monotonic()\n")
+    assert any(v.rule == "L007" for v in vs)
+    vs = _lint("from time import perf_counter\n")
+    assert any(v.rule == "L007" for v in vs)
+
+
+def test_l007_suppression_and_sanctioned_paths():
+    src = "import time\nt0 = time.perf_counter()  # lint: ok(L007)\n"
+    assert not any(v.rule == "L007" for v in _lint(src))
+    clean = "import time\nt0 = time.perf_counter()\n"
+    assert not _lint(clean, path="src/repro/telemetry/spans.py")
+    assert not _lint(clean, path="benchmarks/_timing.py")
+    # time.time / sleep are not timing reads — out of scope
+    assert not any(v.rule == "L007" for v in _lint("import time\ntime.sleep(0)\n"))

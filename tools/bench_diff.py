@@ -70,17 +70,32 @@ def next_name(root: Optional[Path] = None) -> str:
     return f"BENCH_{snaps[-1][0] + 1 if snaps else 1}.json"
 
 
+def _telemetry_bytes(payload: dict) -> Optional[float]:
+    """Per-device window-payload bytes from the snapshot's telemetry block
+    (recorded analytically by ``core.distributed``)."""
+    gauges = (payload.get("telemetry") or {}).get("gauges") or {}
+    gauge = gauges.get("distributed.exchange_bytes.window_payload") or {}
+    last = gauge.get("last")
+    return float(last) if last is not None else None
+
+
 def anchor_values(payload: dict) -> Dict[str, Tuple[str, float]]:
     """Anchor rows of one snapshot: row name -> (metric, value)."""
+    tel_bytes = _telemetry_bytes(payload)
     out: Dict[str, Tuple[str, float]] = {}
     for row in payload.get("rows", []):
         name = row.get("name", "")
         for pat, metric in ANCHORS:
             if pat in name:
                 if metric == "bytes":
-                    m = _BYTES.search(str(row.get("derived", "")))
-                    if m:
-                        out[name] = ("bytes", float(m.group(1)))
+                    # preferred source: the telemetry gauge; the derived-row
+                    # regex remains as fallback for pre-telemetry snapshots
+                    if tel_bytes is not None:
+                        out[name] = ("bytes", tel_bytes)
+                    else:
+                        m = _BYTES.search(str(row.get("derived", "")))
+                        if m:
+                            out[name] = ("bytes", float(m.group(1)))
                 else:
                     out[name] = ("time", float(row["us_per_call"]))
                 break

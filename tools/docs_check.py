@@ -8,12 +8,14 @@ Public surface checked:
 * every name in ``repro.analysis.__all__`` (the static checker's surface);
 * every name in ``repro.runtime.__all__`` (the self-healing execution
   layer: guarded dispatch, fault injection, fault tolerance) plus the
-  serving degradation surface (``Request`` / ``ServingReport``).
+  serving degradation surface (``Request`` / ``ServingReport``);
+* every name in ``repro.telemetry.__all__`` (spans, metrics, trace
+  export).
 
 Wired to ``make docs-check`` (and ``make ci``), so a PR that adds a public
 symbol without documenting it fails CI.  Symbols may be documented in
-``docs/architecture.md`` or ``docs/robustness.md`` (the two pages are
-searched as one corpus).  The check requires each symbol as a whole word
+``docs/architecture.md``, ``docs/robustness.md``, or
+``docs/observability.md`` (the pages are searched as one corpus).  The check requires each symbol as a whole word
 (word-boundary regex, so ``merge`` is not satisfied by
 ``merge_batched``) — the "Public API index" section lists every symbol
 by name.
@@ -32,6 +34,7 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 DOCS = (
     os.path.join(ROOT, "docs", "architecture.md"),
     os.path.join(ROOT, "docs", "robustness.md"),
+    os.path.join(ROOT, "docs", "observability.md"),
 )
 
 
@@ -41,6 +44,7 @@ def public_symbols() -> dict:
     import repro.core as core
     import repro.kernels.ops as ops
     import repro.runtime as runtime
+    import repro.telemetry as telemetry
 
     ops_names = sorted(
         name
@@ -56,6 +60,7 @@ def public_symbols() -> dict:
         "repro.analysis": sorted(analysis.__all__),
         "repro.runtime": sorted(runtime.__all__),
         "repro.serving.engine": ["Request", "ServingReport", "ServingEngine"],
+        "repro.telemetry": sorted(telemetry.__all__),
     }
 
 
@@ -71,7 +76,8 @@ def main() -> int:
             if not re.search(rf"\b{re.escape(name)}\b", text):
                 missing.append(f"{module}.{name}")
     if missing:
-        print("docs-check: FAIL — public symbols missing from docs/ (architecture.md + robustness.md):")
+        print("docs-check: FAIL — public symbols missing from docs/ "
+              "(architecture.md + robustness.md + observability.md):")
         for m in missing:
             print(f"  - {m}")
         return 1

@@ -33,6 +33,13 @@ fix (the catalog with full rationale lives in ``docs/analysis.md``):
   anywhere else bypasses the fallback chain, the health counters, and
   the ``FallbackWarning`` — exactly the silent degradation the guarded
   dispatch exists to prevent.
+* **L007** — no raw ``time.perf_counter()`` / ``time.monotonic()``
+  outside the telemetry clock layer (``src/repro/telemetry/``) and the
+  shared bench timer (``benchmarks/_timing.py``).  The serving engine's
+  traces replay bit-identically *because* every timestamp routes
+  through the pluggable telemetry clock; a stray wall-clock read is how
+  nondeterminism leaks back in.  Use ``repro.telemetry.wall_seconds``
+  (or ``WALL`` / a ``Telemetry`` span) instead.
 
 Suppression: append ``# lint: ok`` (any rule) or ``# lint: ok(L004)``
 (one rule) to the flagged line.  Stdlib ``ast`` only — the container is
@@ -55,6 +62,14 @@ SANCTIONED_SENTINEL_FILES = ("src/repro/core/merge_path.py",)
 
 # the one module allowed to catch launch failures broadly (guarded dispatch)
 SANCTIONED_LAUNCH_CATCH_FILES = ("src/repro/runtime/resilience.py",)
+
+# the places allowed to read the raw wall clock (L007): the telemetry
+# clock layer itself and the shared benchmark timer
+SANCTIONED_WALL_CLOCK_DIRS = ("src/repro/telemetry/",)
+SANCTIONED_WALL_CLOCK_FILES = ("benchmarks/_timing.py",)
+
+# raw-clock callables L007 forbids elsewhere
+_WALL_CLOCK_NAMES = ("perf_counter", "monotonic")
 
 # callables whose arguments are "keys" for L002's descending-order check
 _KEYED_CALL = re.compile(r"(sort|topk|top_k|merge|argsort)", re.IGNORECASE)
@@ -151,6 +166,9 @@ def lint_source(
     in_kernels = "/kernels/" in posix or posix.startswith("kernels/")
     sanctioned = any(posix.endswith(s) for s in SANCTIONED_SENTINEL_FILES)
     launch_catch_ok = any(posix.endswith(s) for s in SANCTIONED_LAUNCH_CATCH_FILES)
+    wall_clock_ok = any(d in posix for d in SANCTIONED_WALL_CLOCK_DIRS) or any(
+        posix.endswith(s) for s in SANCTIONED_WALL_CLOCK_FILES
+    )
     vs: List[LintViolation] = []
 
     # ancestry map so custom_vjp sites resolve to their outermost function
@@ -257,6 +275,29 @@ def lint_source(
                             "guarded_call) may catch launch failures; route "
                             "the call through guarded dispatch instead"))
 
+        # --- L007: raw wall-clock reads outside the telemetry layer -------
+        if not wall_clock_ok:
+            hit_name = None
+            if (
+                isinstance(node, ast.Attribute)
+                and node.attr in _WALL_CLOCK_NAMES
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "time"
+            ):
+                hit_name = f"time.{node.attr}"
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in _WALL_CLOCK_NAMES:
+                        hit_name = f"from time import {alias.name}"
+                        break
+            if hit_name is not None and not _suppressed(sup, node.lineno, "L007"):
+                vs.append(LintViolation(
+                    "L007", path, node.lineno,
+                    f"raw {hit_name} outside src/repro/telemetry/ and "
+                    f"benchmarks/_timing.py — wall-clock reads break the "
+                    f"deterministic-tick trace guarantee; use "
+                    f"repro.telemetry.wall_seconds (or a telemetry span)"))
+
         # --- L005 collection: custom_vjp owners ---------------------------
         if collect_vjp_owners is not None:
             hit = None
@@ -300,12 +341,23 @@ def vjp_pairing_violations(
     return vs
 
 
+def _lint_paths(root: Path) -> List[Path]:
+    """Files lint_tree covers: ``src/**`` and ``benchmarks/**`` (the bench
+    timers are inside the L007 wall-clock perimeter)."""
+    paths = sorted((root / "src").rglob("*.py"))
+    bench = root / "benchmarks"
+    if bench.is_dir():
+        paths += sorted(bench.rglob("*.py"))
+    return paths
+
+
 def lint_tree(repo_root: Optional[Path] = None) -> List[LintViolation]:
-    """Lint every ``src/**/*.py`` plus the cross-file L005 pairing."""
+    """Lint ``src/**/*.py`` + ``benchmarks/**/*.py`` plus the cross-file
+    L005 pairing."""
     root = Path(repo_root) if repo_root else REPO_ROOT
     vs: List[LintViolation] = []
     owners: List[Tuple[str, str, int]] = []
-    for p in sorted((root / "src").rglob("*.py")):
+    for p in _lint_paths(root):
         rel = p.relative_to(root).as_posix()
         per_file: List[str] = []
         vs += lint_source(p.read_text(), rel, collect_vjp_owners=per_file)
@@ -334,7 +386,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"lint: {v}", file=sys.stderr)
         print(f"lint: FAIL ({len(vs)} violations)", file=sys.stderr)
         return 1
-    print("lint: OK (AST rules L001-L006 clean)")
+    print("lint: OK (AST rules L001-L007 clean)")
     return 0
 
 
